@@ -1,0 +1,84 @@
+"""Shared benchmark machinery: collections, query sets, timing.
+
+The paper's experimental protocol (§5) at laptop scale:
+ * a highly repetitive versioned collection (Table 1 analogue);
+ * query sets: low-frequency words, high-frequency words, 2-word and 5-word
+   conjunctive/phrase queries, sampled from the collection;
+ * metrics: space as % of the plain collection, time in µs per occurrence.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+from repro.data.text import is_word_token, tokenize
+
+
+@lru_cache(maxsize=4)
+def bench_collection(kind: str = "np"):
+    if kind == "np":  # non-positional: bigger, very repetitive
+        return generate_collection(n_articles=12, versions_per_article=40,
+                                   words_per_doc=250, edit_rate=0.01, seed=17)
+    if kind == "pos":  # positional / self-index: smaller (char-level builds)
+        return generate_collection(n_articles=6, versions_per_article=25,
+                                   words_per_doc=180, edit_rate=0.01, seed=23)
+    raise ValueError(kind)
+
+
+@dataclass
+class QuerySets:
+    low_freq: list[list[str]]
+    high_freq: list[list[str]]
+    two_word: list[list[str]]
+    five_word: list[list[str]]
+
+
+def make_query_sets(col, n_queries: int = 200, seed: int = 5,
+                    positional: bool = False) -> QuerySets:
+    rng = np.random.default_rng(seed)
+    probe = (PositionalIndex if positional else NonPositionalIndex).build(
+        col.docs, store="vbyte")
+    vocab_words = [w for w in probe.vocab.id_to_token
+                   if is_word_token(w) and w != "\x00"]
+    freqs = {}
+    for w in vocab_words:
+        wid = probe.vocab.get(w)
+        freqs[w] = probe.store.list_length(wid) if wid is not None else 0
+    med = np.median([f for f in freqs.values() if f > 0])
+    lows = [w for w, f in freqs.items() if 0 < f <= med]
+    highs = [w for w, f in freqs.items() if f > med]
+    low_freq = [[lows[int(rng.integers(len(lows)))]] for _ in range(n_queries)]
+    high_freq = [[highs[int(rng.integers(len(highs)))]] for _ in range(n_queries)]
+
+    # phrases sampled from real text (paper: random text positions)
+    def sample_phrase(k: int) -> list[str]:
+        doc = col.docs[int(rng.integers(len(col.docs)))]
+        toks = tokenize(doc)
+        i = int(rng.integers(0, max(1, len(toks) - k)))
+        return toks[i : i + k]
+
+    two_word = [sample_phrase(2) for _ in range(n_queries)]
+    five_word = [sample_phrase(5) for _ in range(n_queries)]
+    return QuerySets(low_freq, high_freq, two_word, five_word)
+
+
+def time_queries(fn, queries: list, min_occ: int = 1) -> tuple[float, int]:
+    """Returns (µs per occurrence, total occurrences)."""
+    t0 = time.perf_counter()
+    total = 0
+    for q in queries:
+        res = fn(q)
+        total += max(len(res), 0)
+    dt = time.perf_counter() - t0
+    return 1e6 * dt / max(total, min_occ), total
+
+
+def fmt_row(name: str, space_pct: float, times: dict[str, float]) -> str:
+    t = "  ".join(f"{k}={v:9.2f}" for k, v in times.items())
+    return f"{name:18s} space={space_pct:7.3f}%  {t}"

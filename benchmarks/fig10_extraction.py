@@ -1,0 +1,102 @@
+"""Paper Fig. 10: snippet extraction speed from self-indexes (+ the
+Re-Pair-compressed text backing the inverted indexes).
+
+Extract random snippets of ~80 and ~13000 characters (one line / one
+document); report µs per extracted symbol.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.repair import repair_compress
+from repro.core.selfindex import LZ77Index, LZEndIndex, RLCSA, SLPIndex
+
+from .common import bench_collection
+from .fig6_fig9_positional import _char_stream
+
+SNIPPETS = {"line80": 80, "doc4000": 4000}
+
+
+def run(n_extracts: int = 30) -> list[dict]:
+    col = bench_collection("pos")
+    t = _char_stream(col)
+    rng = np.random.default_rng(3)
+    rows = []
+    # the paper's "RePair (text)" row: grammar-compressed text + regular
+    # sampling of C for extraction (no search structures) — the smallest
+    # store that still supports random snippet access (§5.2.4)
+    class RePairText:
+        name = "repair_text"
+
+        def __init__(self, t):
+            tt = np.asarray(t, dtype=np.int64) + 1
+            self.u = int(tt.max())
+            self.c, self.g = repair_compress(tt, self.u)
+            self.rlen = np.ones(self.u + 1 + self.g.n_rules(), dtype=np.int64)
+            for k, (a, b) in enumerate(self.g.rules):
+                self.rlen[self.u + 1 + k] = self.rlen[a] + self.rlen[b]
+            self.prefix = np.concatenate([[0], np.cumsum(self.rlen[self.c])])
+
+        def _expand(self, sym, out):
+            stack = [sym]
+            while stack:
+                x = stack.pop()
+                if x <= self.u:
+                    out.append(x - 1)
+                else:
+                    a, b = self.g.rules[x - self.u - 1]
+                    stack.append(b)
+                    stack.append(a)
+
+        def extract(self, x, y):
+            i = int(np.searchsorted(self.prefix, x, side="right")) - 1
+            out: list[int] = []
+            pos = int(self.prefix[i])
+            while pos <= y and i < len(self.c):
+                seg: list[int] = []
+                self._expand(int(self.c[i]), seg)
+                out.extend(seg)
+                pos += len(seg)
+                i += 1
+            arr = np.asarray(out, dtype=np.int64)
+            off = x - int(self.prefix[int(np.searchsorted(self.prefix, x, side='right')) - 1])
+            return arr[off : off + (y - x + 1)]
+
+        @property
+        def size_in_bits(self):
+            w = max(1, int(self.u + self.g.n_rules() + 1).bit_length())
+            # C + rules + sampled prefix positions (1/16)
+            return len(self.c) * w + self.g.n_rules() * 2 * w + len(self.c) * 2
+
+    for name, cls in [("rlcsa", RLCSA), ("lz77_index", LZ77Index),
+                      ("lzend_index", LZEndIndex), ("slp", SLPIndex),
+                      ("repair_text", RePairText)]:
+        idx = cls(t)
+        times = {}
+        for sname, slen in SNIPPETS.items():
+            tot = 0.0
+            syms = 0
+            for _ in range(n_extracts):
+                i = int(rng.integers(0, max(1, len(t) - slen - 1)))
+                t0 = time.perf_counter()
+                out = idx.extract(i, i + slen - 1)
+                tot += time.perf_counter() - t0
+                syms += len(out)
+            times[sname] = 1e6 * tot / max(1, syms)
+        row = {"name": name, "space_pct": 100 * idx.size_in_bits / 8 / len(t), **times}
+        rows.append(row)
+        print(f"{name:14s} space={row['space_pct']:7.3f}%  " +
+              "  ".join(f"{k}={v:8.3f}us/sym" for k, v in times.items()), flush=True)
+    return rows
+
+
+def main() -> None:
+    print("# Fig. 10 — snippet extraction (µs per symbol)")
+    run()
+
+
+if __name__ == "__main__":
+    main()

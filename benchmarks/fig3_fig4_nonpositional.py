@@ -1,0 +1,47 @@
+"""Paper Figs. 3+4: non-positional indexes — traditional techniques (Fig. 3)
+and the paper's new representations (Fig. 4) on the same collection.
+
+Reports space (% of collection) and µs/occurrence for word queries
+(low/high frequency) and 2-/5-word conjunctive queries.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex
+
+from .common import bench_collection, fmt_row, make_query_sets, time_queries
+
+TRADITIONAL = ["vbyte", "rice", "simple9", "pfordelta", "opt_pfd", "elias_fano", "ef_opt",
+               "interpolative", "vbyte_cm", "vbyte_st", "vbyte_cmb"]
+OURS = ["rice_runs", "vbyte_lzma", "vbyte_lzend", "repair", "repair_skip",
+        "repair_skip_cm", "repair_skip_st"]
+
+
+def run(stores: list[str] | None = None, n_queries: int = 150) -> list[dict]:
+    col = bench_collection("np")
+    qs = make_query_sets(col, n_queries=n_queries)
+    rows = []
+    for store in stores or (TRADITIONAL + OURS):
+        idx = NonPositionalIndex.build(col.docs, store=store)
+        times = {}
+        times["word_lo"], _ = time_queries(lambda q: idx.query_word(q[0]), qs.low_freq)
+        times["word_hi"], _ = time_queries(lambda q: idx.query_word(q[0]), qs.high_freq)
+        times["and2"], _ = time_queries(idx.query_and, qs.two_word)
+        times["and5"], _ = time_queries(idx.query_and, qs.five_word)
+        row = {"name": store, "space_pct": 100 * idx.space_fraction, **times}
+        rows.append(row)
+        print(fmt_row(store, row["space_pct"], times), flush=True)
+    return rows
+
+
+def main() -> None:
+    print("# Fig. 3 — traditional techniques (non-positional, repetitive collection)")
+    run(TRADITIONAL)
+    print("# Fig. 4 — our representations")
+    run(OURS)
+
+
+if __name__ == "__main__":
+    main()

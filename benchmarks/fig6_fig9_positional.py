@@ -1,0 +1,121 @@
+"""Paper Figs. 6+9: positional indexes — traditional (Fig. 6), ours, and the
+self-indexes (Fig. 9) on the same collection.
+
+Phrase queries return occurrence positions; times are µs/occurrence.
+Self-indexes run on the raw character stream (RLCSA/LZ77/LZend/SLP) or the
+word-id stream (WCSA/WSLP), as in Appendix A.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.index import PositionalIndex
+from repro.core.selfindex import LZ77Index, LZEndIndex, RLCSA, SLPIndex, WCSA, WSLPIndex
+from repro.data.text import tokenize
+
+from .common import bench_collection, fmt_row, make_query_sets, time_queries
+
+TRADITIONAL = ["vbyte", "rice", "simple9", "elias_fano", "ef_opt", "vbyte_cm", "vbyte_st"]
+OURS = ["vbyte_lzma", "repair", "repair_skip", "repair_skip_cm"]
+SELF_CHAR = [("rlcsa", RLCSA), ("lz77_index", LZ77Index),
+             ("lzend_index", LZEndIndex), ("slp", SLPIndex)]
+SELF_WORD = [("wcsa", WCSA), ("wslp", WSLPIndex)]
+
+
+def run_inverted(stores, n_queries=100) -> list[dict]:
+    col = bench_collection("pos")
+    qs = make_query_sets(col, n_queries=n_queries, positional=True)
+    rows = []
+    for store in stores:
+        idx = PositionalIndex.build(col.docs, store=store)
+        times = {}
+        times["word_lo"], _ = time_queries(lambda q: idx.query_word(q[0]), qs.low_freq)
+        times["word_hi"], _ = time_queries(lambda q: idx.query_word(q[0]), qs.high_freq)
+        times["phr2"], _ = time_queries(idx.query_phrase, qs.two_word)
+        times["phr5"], _ = time_queries(idx.query_phrase, qs.five_word)
+        row = {"name": store, "space_pct": 100 * idx.space_fraction, **times}
+        rows.append(row)
+        print(fmt_row(store, row["space_pct"], times), flush=True)
+    return rows
+
+
+def _char_stream(col) -> np.ndarray:
+    text = "\x00".join(col.docs)
+    return np.frombuffer(text.encode("latin-1", errors="replace"), dtype=np.uint8).astype(np.int64)
+
+
+def _word_stream(col) -> tuple[np.ndarray, dict]:
+    from repro.data.text import Vocabulary
+
+    vocab = Vocabulary()
+    stream: list[int] = []
+    for doc in col.docs:
+        stream.extend(vocab.add(t) for t in tokenize(doc))
+        stream.append(vocab.add("\x00"))
+    return np.asarray(stream, dtype=np.int64), vocab
+
+
+def run_selfindexes(n_queries=40) -> list[dict]:
+    col = bench_collection("pos")
+    qs = make_query_sets(col, n_queries=n_queries, positional=True)
+    total_bytes = col.total_bytes
+    rows = []
+
+    cstream = _char_stream(col)
+    for name, cls in SELF_CHAR:
+        t0 = time.perf_counter()
+        idx = cls(cstream)
+        build_s = time.perf_counter() - t0
+
+        def q_char(words):
+            pat = np.frombuffer(" ".join(words).encode("latin-1", errors="replace"),
+                                dtype=np.uint8).astype(np.int64)
+            return idx.locate(pat)
+
+        times = {}
+        times["word_lo"], _ = time_queries(q_char, qs.low_freq[: n_queries // 2])
+        times["phr2"], _ = time_queries(q_char, qs.two_word[: n_queries // 2])
+        times["phr5"], _ = time_queries(q_char, qs.five_word[: n_queries // 2])
+        row = {"name": name, "space_pct": 100 * idx.size_in_bits / 8 / total_bytes,
+               "build_s": round(build_s, 1), **times}
+        rows.append(row)
+        print(fmt_row(name, row["space_pct"], times), flush=True)
+
+    wstream, vocab = _word_stream(col)
+    for name, cls in SELF_WORD:
+        t0 = time.perf_counter()
+        idx = cls(wstream)
+        build_s = time.perf_counter() - t0
+
+        def q_word(words):
+            ids = [vocab.get(w) for w in words]
+            if any(i is None for i in ids):
+                return np.zeros(0)
+            return idx.locate(np.asarray(ids, dtype=np.int64))
+
+        times = {}
+        times["word_lo"], _ = time_queries(q_word, qs.low_freq[: n_queries // 2])
+        times["phr2"], _ = time_queries(q_word, qs.two_word[: n_queries // 2])
+        times["phr5"], _ = time_queries(q_word, qs.five_word[: n_queries // 2])
+        vocab_bits = 8 * sum(len(t) + 1 for t in vocab.id_to_token)
+        row = {"name": name, "space_pct": 100 * (idx.size_in_bits + vocab_bits) / 8 / total_bytes,
+               "build_s": round(build_s, 1), **times}
+        rows.append(row)
+        print(fmt_row(name, row["space_pct"], times), flush=True)
+    return rows
+
+
+def main() -> None:
+    print("# Fig. 6 — traditional positional indexes")
+    run_inverted(TRADITIONAL)
+    print("# Fig. 9 — our positional representations")
+    run_inverted(OURS)
+    print("# Fig. 9 — self-indexes")
+    run_selfindexes()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows at the end (us_per_call is the
+representative query time; derived is the space fraction or analogous
+metric), after each module's detailed table.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t_start = time.time()
+    csv: list[tuple[str, float, float]] = []
+
+    from . import table1_collection
+    print("\n# Table 1 — collections")
+    rows = table1_collection.run()
+    for r in rows:
+        csv.append((f"table1/{r['name']}", 0.0, r["versions_per_article"]))
+
+    from . import fig3_fig4_nonpositional as f34
+    print("\n# Fig. 3 — traditional non-positional")
+    for r in f34.run(f34.TRADITIONAL):
+        csv.append((f"fig3/{r['name']}", r["and2"], r["space_pct"]))
+    print("\n# Fig. 4 — our non-positional representations")
+    for r in f34.run(f34.OURS):
+        csv.append((f"fig4/{r['name']}", r["and2"], r["space_pct"]))
+
+    from . import fig5_universality
+    print("\n# Fig. 5 — universality")
+    for r in fig5_universality.run():
+        csv.append((f"fig5/{r['structure']}/{r['store']}", 0.0, r["space_pct"]))
+
+    from . import fig6_fig9_positional as f69
+    print("\n# Fig. 6 — traditional positional")
+    for r in f69.run_inverted(f69.TRADITIONAL):
+        csv.append((f"fig6/{r['name']}", r["phr2"], r["space_pct"]))
+    print("\n# Fig. 9 — our positional representations")
+    for r in f69.run_inverted(f69.OURS):
+        csv.append((f"fig9/{r['name']}", r["phr2"], r["space_pct"]))
+    print("\n# Fig. 9 — self-indexes")
+    for r in f69.run_selfindexes():
+        csv.append((f"fig9self/{r['name']}", r["phr2"], r["space_pct"]))
+
+    from . import fig10_extraction
+    print("\n# Fig. 10 — extraction")
+    for r in fig10_extraction.run():
+        csv.append((f"fig10/{r['name']}", r["line80"], r["space_pct"]))
+
+    from . import anchors_tpu
+    print("\n# Beyond-paper — anchored intersection")
+    out = anchors_tpu.run()
+    csv.append(("anchored/skip_seq", out["paper_skip_us_per_pair"], 1.0))
+    csv.append(("anchored/batched", out["anchored_us_per_pair"], out["speedup"]))
+
+    print(f"\n# total bench time: {time.time() - t_start:.1f}s")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.3f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

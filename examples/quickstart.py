@@ -1,0 +1,48 @@
+"""Quickstart: build a compressed inverted index over a highly repetitive
+versioned collection and query it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+
+
+def main() -> None:
+    # a wiki-like collection: 10 articles x 30 near-identical versions
+    col = generate_collection(n_articles=10, versions_per_article=30,
+                              words_per_doc=200, edit_rate=0.01, seed=1)
+    print(f"collection: {col.n_docs} docs, {col.total_bytes/1e6:.2f} MB")
+
+    print("\nnon-positional index sizes (% of collection):")
+    for store in ["vbyte", "rice", "ef_opt", "rice_runs", "vbyte_lzma",
+                  "repair_skip", "vbyte_lzend"]:
+        idx = NonPositionalIndex.build(col.docs, store=store)
+        print(f"  {store:14s} {100 * idx.space_fraction:7.3f}%")
+
+    idx = NonPositionalIndex.build(col.docs, store="repair_skip")
+    words = [w for w in idx.vocab.id_to_token[:40]]
+    q = [words[3], words[11]]
+    docs = idx.query_and(q)
+    print(f"\nAND query {q}: {len(docs)} docs -> {docs[:12].tolist()}...")
+
+    pos = PositionalIndex.build(col.docs, store="repair_skip")
+    from repro.data.text import tokenize
+
+    phrase = tokenize(col.docs[0])[4:7]
+    hits = pos.query_phrase(phrase)
+    d, off = pos.positions_to_docs(hits)
+    print(f"phrase {phrase}: {len(hits)} occurrences; "
+          f"first at doc {int(d[0])} word-offset {int(off[0])}" if len(hits)
+          else f"phrase {phrase}: no hits")
+
+    # verify one hit by eye
+    if len(hits):
+        doc_tokens = tokenize(col.docs[int(d[0])])
+        print("  context:", " ".join(doc_tokens[int(off[0]) - 2 : int(off[0]) + 5]))
+
+
+if __name__ == "__main__":
+    main()

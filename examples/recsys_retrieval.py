@@ -1,0 +1,72 @@
+"""Recsys retrieval with an inverted-index candidate pre-filter — where the
+paper's technique plugs directly into a neural serving stack (DESIGN.md §5).
+
+Items carry categorical tags; the tag->item posting lists are stored
+Re-Pair-compressed (the paper's index).  A query first pre-filters
+candidates by tag (compressed AND query), then the two-tower model scores
+only the filtered set — vs brute-force scoring of the whole catalog.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.intersect import repair_intersect_multi
+from repro.core.repair import RePairStore
+from repro.models import recsys, steps as steps_mod
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    cfg = get_config("two-tower-retrieval").reduced()
+    n_items, n_tags = 5000, 40
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, n_items=n_items, n_users=1000)
+    params = steps_mod.init_model_params(cfg, jax.random.PRNGKey(0))
+
+    # tag -> item posting lists (clustered: versioned-catalog-like)
+    tags_per_item = [
+        set(rng.choice(n_tags, size=int(rng.integers(1, 4)), replace=False).tolist())
+        | {int(i // (n_items // 8) % n_tags)}
+        for i in range(n_items)
+    ]
+    lists = [np.asarray(sorted(i for i in range(n_items) if t in tags_per_item[i]),
+                        dtype=np.int64) for t in range(n_tags)]
+    store = RePairStore.build(lists, variant="skip")
+    print(f"tag index: {n_tags} tags over {n_items} items, "
+          f"{store.size_in_bits/8/1024:.1f} KiB compressed")
+
+    serve = jax.jit(lambda p, u, c: recsys.tt_retrieval(cfg, p, u, c))
+    user = jnp.asarray(rng.integers(0, cfg.n_users, (1, 16)), jnp.int32)
+
+    # brute force: score everything
+    all_items = jnp.arange(n_items, dtype=jnp.int32)
+    t0 = time.perf_counter()
+    scores_all = np.asarray(serve(params, user, all_items))[0]
+    brute_ms = 1e3 * (time.perf_counter() - t0)
+
+    # pre-filtered: items with both required tags (compressed intersection)
+    want = [2, 9]
+    cand = repair_intersect_multi(store, want)
+    t0 = time.perf_counter()
+    scores = np.asarray(serve(params, user, jnp.asarray(cand, jnp.int32)))[0]
+    filt_ms = 1e3 * (time.perf_counter() - t0)
+    top = cand[np.argsort(-scores)[:5]]
+    print(f"tags {want}: {len(cand)}/{n_items} candidates after index pre-filter")
+    print(f"top-5 items {top.tolist()}")
+    # consistency: the filtered top-5 equals brute-force top-5 restricted to the filter
+    mask = np.zeros(n_items, bool)
+    mask[cand] = True
+    ref_top = np.argsort(-np.where(mask, scores_all, -np.inf))[:5]
+    assert set(top.tolist()) == set(ref_top.tolist())
+    print(f"score-all={brute_ms:.1f}ms vs prefiltered={filt_ms:.1f}ms (identical top-k)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on the
+synthetic repetitive corpus, with async checkpointing + auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(The model is a scaled-down granite-3-2b family member: 8 layers, d=512 —
+~106M params with the full vocab; fits CPU for demonstration.  On a real
+mesh, swap in the full config + shardings from repro.sharding.)
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.data.pipelines import lm_batches
+from repro.models import steps as steps_mod
+from repro.train.loop import TrainLoop
+from repro.train.optimizer import OptConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b"),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=49155, dtype="float32",
+    )
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+
+    opt = OptConfig(kind="adamw", lr=3e-4, warmup_steps=30, total_steps=args.steps)
+    params = steps_mod.init_model_params(cfg, jax.random.PRNGKey(0))
+    state = steps_mod.init_state(params, opt)
+    step = jax.jit(steps_mod.make_lm_train_step(cfg, opt), donate_argnums=(0,))
+    data = lm_batches(cfg, args.batch, args.seq, seed=0)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm_ckpt_")
+    ck = Checkpointer(ckpt_dir, keep=2)
+    state, start = TrainLoop.resume_or_init(ck, state)
+    loop = TrainLoop(train_step=step, data_iter=data, checkpointer=ck, ckpt_every=100)
+    state, logs = loop.run(state, args.steps, start_step=start)
+
+    losses = [l["loss"] for l in logs]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(logs)} steps "
+          f"(mean step {np.mean([l['dt_s'] for l in logs]) * 1e3:.0f} ms, "
+          f"stragglers {sum(l['straggler'] for l in logs)})")
+    print(f"checkpoints in {ckpt_dir}: steps {ck.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Fault-tolerant checkpointing.
+
+* atomic: write to ``step_N.tmp/`` then ``os.replace`` to ``step_N/`` —
+  a crash mid-write never corrupts the latest checkpoint;
+* async: the device->host transfer happens on the caller thread (cheap),
+  serialization runs on a background writer thread so the train loop keeps
+  stepping;
+* integrity: every array file carries a crc32 recorded in the manifest;
+  restore verifies before handing state back;
+* retention: keep the newest ``keep`` checkpoints (older ones deleted after
+  a successful save — never before);
+* topology independence: arrays are saved *unsharded* (gathered) with their
+  pytree paths; ``restore(..., sharding_tree=...)`` re-device_puts onto any
+  mesh — this is what elastic re-scaling uses (see reshard()).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def _unflatten(tree_like, arrays: dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        leaves.append(arrays[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclass
+class Checkpointer:
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state) -> None:
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()  # one in-flight save at a time
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_state)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_state) -> None:
+        try:
+            final = os.path.join(self.directory, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "leaves": {}}
+            for key, arr in _flatten(host_state):
+                fname = key.replace("/", "__") + ".npy"
+                path = os.path.join(tmp, fname)
+                np.save(path, arr)
+                with open(path, "rb") as f:
+                    crc = zlib.crc32(f.read())
+                manifest["leaves"][key] = {"file": fname, "crc32": crc,
+                                           "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+        except Exception as e:  # noqa: BLE001 — surfaced on next wait()
+            self._error = e
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None, sharding_tree=None):
+        """Load into the structure of ``state_like``; verify checksums.
+
+        Corrupt checkpoints raise; callers fall back to the previous step
+        (see restore_latest_valid).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoints found")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = {}
+        for key, rec in manifest["leaves"].items():
+            path = os.path.join(d, rec["file"])
+            with open(path, "rb") as f:
+                data = f.read()
+            if zlib.crc32(data) != rec["crc32"]:
+                raise IOError(f"checksum mismatch in {path}")
+            arrays[key] = np.load(path)
+        state = _unflatten(state_like, arrays)
+        if sharding_tree is not None:
+            state = jax.tree.map(jax.device_put, state, sharding_tree)
+        return state, step
+
+    def restore_latest_valid(self, state_like, sharding_tree=None):
+        """Walk checkpoints newest-first until one verifies (node-failure
+        recovery path: a half-written or bit-rotted snapshot is skipped)."""
+        last_err: Exception | None = None
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(state_like, step, sharding_tree)
+            except Exception as e:  # noqa: BLE001
+                last_err = e
+        raise FileNotFoundError(f"no valid checkpoint ({last_err})")
+
+
+def reshard(state, mesh, spec_tree):
+    """Re-place a (host or device) state pytree onto a new mesh — the
+    elastic-scaling path: restore unsharded, then reshard to the new
+    topology."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(jax.device_put, state, shardings)

@@ -1,0 +1,128 @@
+"""TPU-native anchored representation of Re-Pair compressed lists
+(DESIGN.md §2 — the beyond-paper adaptation).
+
+The paper's skipping intersection walks C sequentially, accumulating phrase
+sums.  On a vector machine the same information is precomputed once:
+
+    anchor[j] = cumulative d-gap BEFORE C entry j   (prefix sum of phrase sums)
+
+Membership of x in a list becomes: binary-search the list's anchor slice for
+x (vectorized over query batches), then verify inside at most ONE phrase via
+a bounded expansion table (depth is O(log n), paper §4.4).  Work per probe is
+O(log n' + expand), identical to the paper's sampled bound (Cor. 1), but
+with no branches and full query-batch parallelism.
+
+``AnchoredIndex`` is the device-resident form consumed by
+``repro.serving.engine`` and the ``uihrdc`` dry-run config.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .repair import RePairStore
+
+
+@dataclass
+class AnchoredIndex:
+    """Flat device arrays for batched query execution."""
+
+    anchors: jax.Array  # (n_c,) int32 — cumulative gap before each C entry
+    c_offsets: jax.Array  # (n_lists+1,) int32 — list slices into anchors/expand
+    expand: jax.Array  # (n_c, expand_len) int32 — per-entry absolute values
+    # (bounded expansion; entries longer than expand_len spill, see mask)
+    expand_valid: jax.Array  # (n_c, expand_len) bool
+    lengths: jax.Array  # (n_lists,) int32
+    expand_len: int
+
+    @classmethod
+    def from_store(cls, store: RePairStore, expand_len: int = 32) -> "AnchoredIndex":
+        n_lists = store.n_lists
+        store.memoize = True  # build-time expansion cache
+        # widen the table to the longest phrase so probes are exact
+        max_len = 1
+        for s in np.unique(store.c):
+            max_len = max(max_len, store.symbol_len(int(s)))
+        if max_len > expand_len:
+            expand_len = int(2 ** np.ceil(np.log2(max_len)))
+        anchors_np = []
+        expand_np = []
+        valid_np = []
+        offsets = store.c_offsets.astype(np.int64)
+        for i in range(n_lists):
+            lo, hi = int(offsets[i]), int(offsets[i + 1])
+            run = 0
+            for j in range(lo, hi):
+                sym = int(store.c[j])
+                anchors_np.append(run)
+                gaps = store.expand_symbol(sym)
+                acc = np.cumsum(gaps) + run
+                row = np.zeros(expand_len, dtype=np.int64)
+                vrow = np.zeros(expand_len, dtype=bool)
+                row[: len(acc)] = acc
+                vrow[: len(acc)] = True
+                expand_np.append(row)
+                valid_np.append(vrow)
+                run += int(store.symbol_sum(sym))
+        return cls(
+            anchors=jnp.asarray(anchors_np, jnp.int32),
+            c_offsets=jnp.asarray(np.asarray(offsets), jnp.int32),
+            expand=jnp.asarray(np.asarray(expand_np), jnp.int32),
+            expand_valid=jnp.asarray(np.asarray(valid_np)),
+            lengths=jnp.asarray(np.asarray(store.lengths), jnp.int32),
+            expand_len=expand_len,
+        )
+
+    def device_bytes(self) -> int:
+        tot = 0
+        for a in (self.anchors, self.c_offsets, self.expand, self.expand_valid, self.lengths):
+            tot += a.size * a.dtype.itemsize
+        return tot
+
+
+def build_anchored(lists: list[np.ndarray], expand_len: int = 32, **kw) -> AnchoredIndex:
+    """Re-Pair compress, then anchor (expand table widened to the longest
+    phrase so probes are exact)."""
+    store = RePairStore.build(lists, variant="skip", **kw)
+    return AnchoredIndex.from_store(store, expand_len=expand_len)
+
+
+# ----------------------------------------------------------------------
+# batched membership / intersection (jit-able)
+# ----------------------------------------------------------------------
+def member_batch(idx: AnchoredIndex, list_ids: jax.Array, values: jax.Array) -> jax.Array:
+    """For each (list_id, value) pair: is value in that list?  Fully batched.
+
+    values are absolute postings; comparison in cumulative-gap space (+1).
+    Anchors are per-list cumulative sums, so the binary search runs within
+    the list's [lo, hi) slice — a fixed-depth ``fori_loop`` (vectorizes under
+    vmap; the Pallas ``anchor_intersect`` kernel is the tiled-compare TPU
+    variant of the same probe).
+    """
+    targets = values.astype(jnp.int32) + 1
+    lo = idx.c_offsets[list_ids]
+    hi = idx.c_offsets[list_ids + 1]
+
+    def one(lid_lo, lid_hi, t):
+        # find first entry in [lo, hi) whose anchor >= t, then step back:
+        # entry j covers targets in (anchor[j], anchor[j] + phrase_sum]
+        def body(_, lh):
+            l, h = lh
+            mid = (l + h) // 2
+            active = l < h  # fixed-depth loop: freeze once converged
+            go_right = active & (idx.anchors[mid] < t)
+            new_l = jnp.where(go_right, mid + 1, l)
+            new_h = jnp.where(active & ~go_right, mid, h)
+            return (new_l, new_h)
+
+        l, _ = jax.lax.fori_loop(0, 32, body, (lid_lo, lid_hi))
+        j = jnp.maximum(l - 1, lid_lo)
+        row = idx.expand[j]
+        ok = idx.expand_valid[j] & (row == t)
+        return ok.any() & (lid_lo < lid_hi)
+
+    return jax.vmap(one)(lo, hi, targets)

@@ -1,0 +1,137 @@
+"""Codec interfaces.
+
+Two tiers (paper §3):
+
+* :class:`Codec` — per-list compressor.  ``encode`` takes the *d-gap* array of
+  one posting list (all values >= 1), ``decode`` inverts it.  Used by the
+  classical baselines (Vbyte, Rice, Simple9, PForDelta, EF, interpolative,
+  Rice-Runs, Vbyte-LZMA).
+
+* :class:`ListStore` — whole-index compressor over the *concatenation* of all
+  d-gap lists (Vbyte-LZend, Re-Pair variants).  These are the paper's
+  universal representations: they capture inter-list regularities.
+
+Sizes are accounted in *bits*, exactly, including per-list pointers for the
+stores, so the space columns of the benchmarks are faithful to the paper's
+accounting (index_size / collection_size).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+CODEC_REGISTRY: dict[str, Callable[..., "Codec"]] = {}
+STORE_REGISTRY: dict[str, Callable[..., "ListStore"]] = {}
+
+
+def register_codec(name: str):
+    def deco(cls):
+        CODEC_REGISTRY[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def register_store(name: str):
+    def deco(cls):
+        STORE_REGISTRY[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+@dataclass
+class EncodedList:
+    """One compressed posting list."""
+
+    n: int  # number of postings
+    nbits: int  # exact payload size in bits
+    data: bytes
+    meta: dict[str, Any] = field(default_factory=dict)
+
+
+class Codec:
+    """Per-list codec over d-gaps (values >= 1)."""
+
+    name: str = "abstract"
+
+    def encode(self, gaps: np.ndarray) -> EncodedList:
+        raise NotImplementedError
+
+    def decode(self, enc: EncodedList) -> np.ndarray:
+        raise NotImplementedError
+
+    # Some codecs (EF, interpolative) natively store absolute values and can
+    # answer successor queries without full decode; default path decodes.
+    def decode_absolute(self, enc: EncodedList) -> np.ndarray:
+        from ..dgaps import from_dgaps
+
+        return from_dgaps(self.decode(enc))
+
+
+class ListStore:
+    """Whole-index list representation (built over all lists at once)."""
+
+    name: str = "abstract"
+
+    @classmethod
+    def build(cls, lists: list[np.ndarray], **kw) -> "ListStore":
+        """``lists`` are the raw (absolute, strictly increasing) postings."""
+        raise NotImplementedError
+
+    @property
+    def n_lists(self) -> int:
+        raise NotImplementedError
+
+    def get_list(self, i: int) -> np.ndarray:
+        """Return the absolute postings of list ``i``."""
+        raise NotImplementedError
+
+    def list_length(self, i: int) -> int:
+        raise NotImplementedError
+
+    @property
+    def size_in_bits(self) -> int:
+        raise NotImplementedError
+
+
+POINTER_BITS = 32  # per-list pointer into the compressed stream (vocabulary side)
+
+
+class PerListStore(ListStore):
+    """Adapter: a per-list :class:`Codec` applied to every list."""
+
+    def __init__(self, codec: Codec, encoded: list[EncodedList]):
+        self.codec = codec
+        self.encoded = encoded
+
+    @classmethod
+    def build(cls, lists: list[np.ndarray], codec: Codec | None = None, **kw) -> "PerListStore":
+        from ..dgaps import to_dgaps
+
+        assert codec is not None
+        encoded = [codec.encode(to_dgaps(np.asarray(l))) for l in lists]
+        return cls(codec, encoded)
+
+    @property
+    def n_lists(self) -> int:
+        return len(self.encoded)
+
+    def get_list(self, i: int) -> np.ndarray:
+        return self.codec.decode_absolute(self.encoded[i])
+
+    def get_gaps(self, i: int) -> np.ndarray:
+        return self.codec.decode(self.encoded[i])
+
+    def list_length(self, i: int) -> int:
+        return self.encoded[i].n
+
+    @property
+    def size_in_bits(self) -> int:
+        payload = sum(e.nbits for e in self.encoded)
+        return payload + POINTER_BITS * len(self.encoded)

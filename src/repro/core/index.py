@@ -1,0 +1,232 @@
+"""Inverted indexes over document collections (paper §3, §5).
+
+* :class:`NonPositionalIndex` — per word, the sorted doc-ids containing it.
+  Word parsing mirrors the paper's §5.1.3 setup: case folding, no stemming,
+  top-20 stopwords removed.  Conjunctive (AND) queries via the store's best
+  intersection path.
+
+* :class:`PositionalIndex` — per token (words *and* separators, §5.2: the
+  text is indexed as-is), the increasing global word offsets in the
+  concatenation ``D`` of all documents (with per-document boundary
+  separators against false phrase matches).  Phrase queries via offset-
+  shifted intersection; positions translate to (doc, offset) through the
+  stored array of document start positions.
+
+Both are parameterized by a list store:  ``store="repair_skip"`` etc. — see
+:data:`STORE_BUILDERS`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from ..data.text import STOPWORDS, Vocabulary, is_word_token, tokenize
+from .codecs import (
+    EliasFano,
+    Interpolative,
+    OptPFD,
+    PartitionedEF,
+    PerListStore,
+    PForDelta,
+    Rice,
+    RiceRuns,
+    Simple9,
+    VByte,
+    VbyteLZMA,
+)
+from .codecs.base import ListStore
+from .intersect import intersect_multi, repair_intersect_multi
+from .lz_store import VbyteLZendStore
+from .repair import RePairStore
+from .sampled_store import SampledVByteStore
+
+STORE_BUILDERS: dict[str, Callable[[list[np.ndarray]], ListStore]] = {
+    "vbyte": lambda ls: PerListStore.build(ls, codec=VByte()),
+    "rice": lambda ls: PerListStore.build(ls, codec=Rice()),
+    "rice_runs": lambda ls: PerListStore.build(ls, codec=RiceRuns()),
+    "simple9": lambda ls: PerListStore.build(ls, codec=Simple9()),
+    "pfordelta": lambda ls: PerListStore.build(ls, codec=PForDelta()),
+    "opt_pfd": lambda ls: PerListStore.build(ls, codec=OptPFD()),
+    "elias_fano": lambda ls: PerListStore.build(ls, codec=EliasFano()),
+    "ef_opt": lambda ls: PerListStore.build(ls, codec=PartitionedEF()),
+    "interpolative": lambda ls: PerListStore.build(ls, codec=Interpolative()),
+    "vbyte_lzma": lambda ls: PerListStore.build(ls, codec=VbyteLZMA()),
+    "vbyte_cm": lambda ls, k=32: SampledVByteStore.build(ls, kind="cm", param=k),
+    "vbyte_st": lambda ls, B=16: SampledVByteStore.build(ls, kind="st", param=B),
+    "vbyte_cmb": lambda ls, k=32: SampledVByteStore.build(ls, kind="cm", param=k, bitmaps=True),
+    "vbyte_stb": lambda ls, B=16: SampledVByteStore.build(ls, kind="st", param=B, bitmaps=True),
+    "repair": lambda ls: RePairStore.build(ls, variant="plain"),
+    "repair_skip": lambda ls: RePairStore.build(ls, variant="skip"),
+    "repair_skip_cm": lambda ls, k=64: RePairStore.build(ls, variant="skip", sampling=("cm", k)),
+    "repair_skip_st": lambda ls, B=1024: RePairStore.build(ls, variant="skip", sampling=("st", B)),
+    "vbyte_lzend": lambda ls: VbyteLZendStore.build(ls),
+}
+
+
+def _store_intersect(store: ListStore, list_ids: list[int]) -> np.ndarray:
+    if isinstance(store, RePairStore):
+        return repair_intersect_multi(store, list_ids)
+    if isinstance(store, SampledVByteStore):
+        return store.intersect_multi(list_ids)
+    lists = [store.get_list(i) for i in list_ids]
+    return intersect_multi(lists)
+
+
+def _store_intersect_shifted(store: ListStore, list_ids: list[int], shifts: list[int]) -> np.ndarray:
+    """Intersect lists after subtracting ``shifts[i]`` from list i (phrase
+    queries §3): returns positions p with p + shifts[i] in list i for all i."""
+    order = sorted(range(len(list_ids)), key=lambda k: store.list_length(list_ids[k]))
+    k0 = order[0]
+    cand = store.get_list(list_ids[k0]) - shifts[k0]
+    for k in order[1:]:
+        if len(cand) == 0:
+            break
+        li, sh = list_ids[k], shifts[k]
+        if isinstance(store, RePairStore) and store.variant == "skip":
+            from .intersect import intersect_repair_skip
+
+            got = intersect_repair_skip(store, li, cand + sh)
+            cand = got - sh
+        elif isinstance(store, SampledVByteStore):
+            got = store.intersect_candidates(li, cand + sh)
+            cand = got - sh
+        else:
+            from .intersect import intersect_svs
+
+            got = intersect_svs(cand + sh, store.get_list(li))
+            cand = got - sh
+    return cand
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class NonPositionalIndex:
+    vocab: Vocabulary
+    store: ListStore
+    n_docs: int
+    collection_bytes: int
+    store_name: str
+
+    @classmethod
+    def build(cls, docs: list[str], store: str = "repair_skip", case_fold: bool = True,
+              drop_stopwords: bool = True, **store_kw) -> "NonPositionalIndex":
+        vocab = Vocabulary()
+        postings: dict[int, list[int]] = {}
+        for d, doc in enumerate(docs):
+            seen: set[int] = set()
+            for tok in tokenize(doc):
+                if not is_word_token(tok):
+                    continue
+                w = tok.lower() if case_fold else tok
+                if drop_stopwords and w in STOPWORDS:
+                    continue
+                wid = vocab.add(w)
+                if wid not in seen:
+                    seen.add(wid)
+                    postings.setdefault(wid, []).append(d)
+        lists = [np.asarray(postings.get(w, []), dtype=np.int64) for w in range(len(vocab))]
+        built = STORE_BUILDERS[store](lists, **store_kw) if store_kw else STORE_BUILDERS[store](lists)
+        return cls(vocab=vocab, store=built, n_docs=len(docs),
+                   collection_bytes=sum(len(d) for d in docs), store_name=store)
+
+    def word_id(self, w: str) -> int | None:
+        return self.vocab.get(w.lower())
+
+    def query_word(self, w: str) -> np.ndarray:
+        wid = self.word_id(w)
+        if wid is None:
+            return np.zeros(0, dtype=np.int64)
+        return self.store.get_list(wid)
+
+    def query_and(self, words: list[str]) -> np.ndarray:
+        ids = []
+        for w in words:
+            wid = self.word_id(w)
+            if wid is None:
+                return np.zeros(0, dtype=np.int64)
+            ids.append(wid)
+        return _store_intersect(self.store, ids)
+
+    @property
+    def size_in_bits(self) -> int:
+        return self.store.size_in_bits
+
+    @property
+    def space_fraction(self) -> float:
+        """index_size / original_size (paper's space metric)."""
+        return (self.size_in_bits / 8) / self.collection_bytes
+
+
+# ----------------------------------------------------------------------
+DOC_SEP = "\x00"
+
+
+@dataclass
+class PositionalIndex:
+    vocab: Vocabulary
+    store: ListStore
+    doc_starts: np.ndarray  # word offset where each document begins in D
+    n_tokens: int
+    collection_bytes: int
+    store_name: str
+    token_stream: np.ndarray | None = None  # kept only when keep_text=True
+
+    @classmethod
+    def build(cls, docs: list[str], store: str = "repair_skip", keep_text: bool = False,
+              **store_kw) -> "PositionalIndex":
+        vocab = Vocabulary()
+        sep_id = vocab.add(DOC_SEP)
+        stream: list[int] = []
+        doc_starts = np.zeros(len(docs), dtype=np.int64)
+        for d, doc in enumerate(docs):
+            doc_starts[d] = len(stream)
+            stream.extend(vocab.add(t) for t in tokenize(doc))
+            stream.append(sep_id)
+        tok = np.asarray(stream, dtype=np.int64)
+        postings: list[list[int]] = [[] for _ in range(len(vocab))]
+        for pos, t in enumerate(stream):
+            postings[t].append(pos)
+        # the separator list is not part of the index (never queried)
+        lists = [np.asarray(postings[w], dtype=np.int64) if w != sep_id else np.zeros(0, dtype=np.int64)
+                 for w in range(len(vocab))]
+        built = STORE_BUILDERS[store](lists, **store_kw) if store_kw else STORE_BUILDERS[store](lists)
+        return cls(vocab=vocab, store=built, doc_starts=doc_starts, n_tokens=len(tok),
+                   collection_bytes=sum(len(d) for d in docs), store_name=store,
+                   token_stream=tok if keep_text else None)
+
+    def token_id(self, t: str) -> int | None:
+        return self.vocab.get(t)
+
+    def query_word(self, w: str) -> np.ndarray:
+        tid = self.token_id(w)
+        if tid is None:
+            return np.zeros(0, dtype=np.int64)
+        return self.store.get_list(tid)
+
+    def query_phrase(self, tokens: list[str]) -> np.ndarray:
+        """Positions of the first token of each phrase occurrence."""
+        ids = []
+        for t in tokens:
+            tid = self.token_id(t)
+            if tid is None:
+                return np.zeros(0, dtype=np.int64)
+            ids.append(tid)
+        if len(ids) == 1:
+            return self.store.get_list(ids[0])
+        return _store_intersect_shifted(self.store, ids, list(range(len(ids))))
+
+    def positions_to_docs(self, positions: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Translate global offsets to (doc id, in-doc word offset) (§3)."""
+        d = np.searchsorted(self.doc_starts, positions, side="right") - 1
+        return d, positions - self.doc_starts[d]
+
+    @property
+    def size_in_bits(self) -> int:
+        return self.store.size_in_bits + 32 * len(self.doc_starts)
+
+    @property
+    def space_fraction(self) -> float:
+        return (self.size_in_bits / 8) / self.collection_bytes

@@ -1,0 +1,7 @@
+"""Self-indexes for the positional comparison (paper Appendix A)."""
+
+from .csa import RLCSA, WCSA
+from .lzidx import LZ77Index, LZEndIndex, LZSelfIndex
+from .slp import SLPIndex, WSLPIndex
+
+__all__ = ["RLCSA", "WCSA", "LZ77Index", "LZEndIndex", "LZSelfIndex", "SLPIndex", "WSLPIndex"]

@@ -1,0 +1,11 @@
+from .text import Vocabulary, tokenize, detokenize, STOPWORDS
+from .collection import VersionedCollection, generate_collection
+
+__all__ = [
+    "Vocabulary",
+    "tokenize",
+    "detokenize",
+    "STOPWORDS",
+    "VersionedCollection",
+    "generate_collection",
+]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels (each with kernel.py + ops.py wrapper + ref.py oracle).
+
+* dgap_decode      — blocked prefix-sum w/ carry: posting-list decompression
+* anchor_intersect — batched anchor probes: RePair-Skip on the VPU
+* embedding_bag    — scalar-prefetch gather + bag-sum: recsys lookup
+* cin_interaction  — fused xDeepFM CIN layer on the MXU
+* flash_attention  — causal GQA flash forward (TPU fast path of models.flash)
+* moe_gemm         — grouped expert GEMM over the MoE dispatch buffer
+* flash_decode     — split-KV single-token decode attention (serve path)
+"""
+
+from .anchor_intersect.ops import anchor_probe
+from .cin_interaction.ops import cin_layer
+from .dgap_decode.ops import dgap_decode
+from .embedding_bag.ops import embedding_bag
+from .flash_attention.ops import flash_attention_tpu
+from .flash_decode.ops import flash_decode
+from .moe_gemm.ops import moe_gemm
+
+__all__ = ["anchor_probe", "cin_layer", "dgap_decode", "embedding_bag", "flash_attention_tpu", "moe_gemm", "flash_decode"]

@@ -1,0 +1,25 @@
+"""User-facing op: batched membership probes against anchor arrays."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ABLK, PAD_VAL, QBLK, anchor_probe_2d
+
+
+def anchor_probe(queries: jax.Array, anchors: jax.Array, interpret: bool = False):
+    """queries (NQ,) int32, anchors (NA,) sorted int32.
+
+    Returns (idx, found) per query: idx = # anchors <= q, found = any == q.
+    Pads both to kernel tiles (sentinel anchors never match or count —
+    queries are assumed < PAD_VAL).
+    """
+    nq = queries.shape[0]
+    na = anchors.shape[0]
+    qpad = (-nq) % QBLK
+    apad = (-na) % ABLK
+    q = jnp.pad(queries.astype(jnp.int32), (0, qpad))[:, None]
+    a = jnp.pad(anchors.astype(jnp.int32), (0, apad), constant_values=PAD_VAL)[None, :]
+    idx, found = anchor_probe_2d(q, a, interpret=interpret)
+    return idx[:nq, 0], found[:nq, 0]

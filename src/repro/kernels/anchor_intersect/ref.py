@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the anchor probe kernel."""
+
+import jax.numpy as jnp
+
+
+def anchor_probe_ref(queries, anchors):
+    """queries (NQ,) int32; anchors (NA,) sorted int32 (may contain PAD_VAL).
+
+    Returns (idx, found): idx = searchsorted-right, found = exact hit.
+    """
+    idx = jnp.searchsorted(anchors, queries, side="right").astype(jnp.int32)
+    found = (jnp.take(anchors, jnp.maximum(idx - 1, 0)) == queries) & (idx > 0)
+    return idx, found.astype(jnp.int32)

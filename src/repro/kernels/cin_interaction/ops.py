@@ -1,0 +1,21 @@
+"""User-facing fused CIN op (pads batch/dim to kernel tiles)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BBLK, DBLK, cin_layer_call
+
+
+def cin_layer(x0: jax.Array, xk: jax.Array, w: jax.Array,
+              interpret: bool = False) -> jax.Array:
+    b, m, d = x0.shape
+    pb = (-b) % BBLK
+    pd = (-d) % DBLK
+    if pb or pd:
+        x0 = jnp.pad(x0, ((0, pb), (0, 0), (0, pd)))
+        xk = jnp.pad(xk, ((0, pb), (0, 0), (0, pd)))
+    out = cin_layer_call(x0.astype(jnp.float32), xk.astype(jnp.float32),
+                         w.astype(jnp.float32), interpret=interpret)
+    return out[:b, :, :d]

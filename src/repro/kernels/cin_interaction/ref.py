@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the CIN layer kernel."""
+
+import jax.numpy as jnp
+
+
+def cin_layer_ref(x0, xk, w):
+    """x0 (B,m,D), xk (B,Hk,D), w (m*Hk, H) -> (B,H,D)."""
+    b, m, d = x0.shape
+    hk = xk.shape[1]
+    inter = jnp.einsum("bmd,bhd->bmhd", x0, xk).reshape(b, m * hk, d)
+    return jnp.einsum("bid,ih->bhd", inter, w)

@@ -1,0 +1,22 @@
+"""User-facing op: decode a 1-D d-gap array of any length."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_ROWS, LANES, dgap_decode_2d
+
+
+def dgap_decode(gaps: jax.Array, interpret: bool = False) -> jax.Array:
+    """1-D int32 gaps -> absolute values (posting = cumsum - 1).
+
+    Pads to the kernel tile, runs the Pallas blocked prefix sum, trims.
+    """
+    n = gaps.shape[0]
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    g = jnp.pad(gaps.astype(jnp.int32), (0, pad))
+    rows = g.shape[0] // LANES
+    out = dgap_decode_2d(g.reshape(rows, LANES), interpret=interpret)
+    return out.reshape(-1)[:n] - 1

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the d-gap decode kernel."""
+
+import jax.numpy as jnp
+
+
+def dgap_decode_ref(gaps):
+    """(rows, lanes) int32 -> inclusive prefix sum over the row-major flat order."""
+    rows, lanes = gaps.shape
+    return jnp.cumsum(gaps.reshape(-1)).reshape(rows, lanes).astype(jnp.int32)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + per-bag sum reduce).
+
+JAX has no native EmbeddingBag; the recsys hot path is a ragged gather over
+a huge HBM-resident table followed by a segment sum.  The TPU pattern is
+scalar-prefetch indexed block loading: the flat lookup indices are
+prefetched into SMEM, and each grid step's *table* BlockSpec selects the row
+block addressed by the current index — the row never round-trips through
+host gather.  Bags are contiguous runs of ``bag_size`` lookups; the output
+block revisits the same bag row across those steps and accumulates in place
+(first visit zeroes).
+
+VMEM per step: one (1, dim) table row + one (1, dim) output row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.partial(jax.jit, static_argnames=("bag_size", "interpret"))
+def embedding_bag_call(indices: jax.Array, table: jax.Array, bag_size: int,
+                       interpret: bool = False) -> jax.Array:
+    """indices (n_bags * bag_size,) int32 row ids; table (V, D).
+
+    Returns (n_bags, D) float32 bag sums.
+    """
+    n = indices.shape[0]
+    assert n % bag_size == 0
+    n_bags = n // bag_size
+    v, d = table.shape
+
+    def kernel(idx_ref, table_ref, out_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i % bag_size == 0)
+        def _zero():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i // bag_size, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
+        interpret=interpret,
+    )(indices, table)

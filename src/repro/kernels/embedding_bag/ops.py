@@ -1,0 +1,23 @@
+"""User-facing EmbeddingBag op (pads bags/dim to kernel requirements)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import embedding_bag_call
+
+
+def embedding_bag(indices: jax.Array, table: jax.Array, bag_size: int,
+                  interpret: bool = False) -> jax.Array:
+    """indices (n_bags, bag_size) or flat; table (V, D) -> (n_bags, D) sums."""
+    if indices.ndim == 2:
+        bag_size = indices.shape[1]
+        indices = indices.reshape(-1)
+    d = table.shape[1]
+    pad_d = (-d) % 128
+    if pad_d:
+        table = jnp.pad(table, ((0, 0), (0, pad_d)))
+    out = embedding_bag_call(indices.astype(jnp.int32), table, bag_size,
+                             interpret=interpret)
+    return out[:, :d]

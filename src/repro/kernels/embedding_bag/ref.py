@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: EmbeddingBag = take + segment_sum."""
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(indices, table, bag_size):
+    n = indices.shape[0]
+    n_bags = n // bag_size
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)
+    bags = jnp.repeat(jnp.arange(n_bags), bag_size)
+    return jax.ops.segment_sum(rows, bags, num_segments=n_bags)

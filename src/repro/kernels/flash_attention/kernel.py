@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: causal flash attention forward (GQA-aware).
+
+Hardware mapping: grid = (batch*kv_head, q_blocks, kv_blocks); the q tile
+(and its GQA group of heads) stays resident in VMEM across the kv_blocks
+axis while k/v tiles stream from HBM; running (m, l, acc) statistics live in
+VMEM scratch.  Causal masking skips nothing structurally (TPU grids are
+dense) but masked tiles cost only the compare — the index map still walks
+them; the hillclimbed variant bounds the kv axis per q block via the grid
+(see ops.flash_attention_causal which passes a trimmed grid).
+
+Shapes: q (B, H, T, hd), k/v (B, K, S, hd); hd padded to 128 lanes.
+VMEM per step: q tile G*QBLK*hd + k/v tiles KVBLK*hd + acc G*QBLK*hd (f32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+QBLK = 256
+KVBLK = 512
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret", "scale"))
+def flash_fwd_call(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True, interpret: bool = False,
+                   scale: float | None = None) -> jax.Array:
+    """q (BK, G, T, hd) — batch*kv_head major, GQA group dim; k, v (BK, S, hd).
+
+    ``scale`` defaults to 1/sqrt(hd); callers that pad hd must pass the
+    true-head-dim scale explicitly."""
+    bk, g, t, hd = q.shape
+    s = k.shape[1]
+    assert t % QBLK == 0 and s % KVBLK == 0
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        qi = pl.program_id(1)
+        kj = pl.program_id(2)
+
+        @pl.when(kj == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        qb = q_ref[0].astype(jnp.float32) * scale  # (G, QBLK, hd)
+        kb = k_ref[0].astype(jnp.float32)  # (KVBLK, hd)
+        vb = v_ref[0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            qb, kb, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (G, QBLK, KVBLK)
+        if causal:
+            qpos = qi * QBLK + jax.lax.broadcasted_iota(jnp.int32, (QBLK, KVBLK), 0)
+            kpos = kj * KVBLK + jax.lax.broadcasted_iota(jnp.int32, (QBLK, KVBLK), 1)
+            mask = (kpos <= qpos)[None]
+            scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, scores.max(-1))
+        p = jnp.exp(scores - m_new[..., None])
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_scr[...] * corr + p.sum(-1)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p, vb, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+        @pl.when(kj == pl.num_programs(2) - 1)
+        def _emit():
+            o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+                        ).astype(o_ref.dtype)
+
+    grid = (bk, t // QBLK, s // KVBLK)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, QBLK, hd), lambda b, qi, kj: (b, 0, qi, 0)),
+            pl.BlockSpec((1, KVBLK, hd), lambda b, qi, kj: (b, kj, 0)),
+            pl.BlockSpec((1, KVBLK, hd), lambda b, qi, kj: (b, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, QBLK, hd), lambda b, qi, kj: (b, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bk, g, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, QBLK), jnp.float32),
+            pltpu.VMEM((g, QBLK), jnp.float32),
+            pltpu.VMEM((g, QBLK, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""User-facing flash attention op in model layout (B, T, H, hd)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import KVBLK, QBLK, flash_fwd_call
+
+
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, interpret: bool = False) -> jax.Array:
+    """q (B, T, H, hd); k, v (B, S, K, hd) — GQA. Returns (B, T, H, hd).
+
+    Reshapes to the kernel's batch*kv_head-major layout and pads T/S/hd.
+    """
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    pt = (-t) % QBLK
+    ps = (-s) % KVBLK
+    pd = (-hd) % 128
+    qk = jnp.moveaxis(q.reshape(b, t, kh, g, hd), 1, 3)  # (B, K, G, T, hd)
+    qk = qk.reshape(b * kh, g, t, hd)
+    kk = jnp.moveaxis(k, 1, 2).reshape(b * kh, s, hd)
+    vk = jnp.moveaxis(v, 1, 2).reshape(b * kh, s, hd)
+    if pt or pd:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, pt), (0, pd)))
+    if ps or pd:
+        kk = jnp.pad(kk, ((0, 0), (0, ps), (0, pd)))
+        vk = jnp.pad(vk, ((0, 0), (0, ps), (0, pd)))
+    out = flash_fwd_call(qk, kk, vk, causal=causal, interpret=interpret,
+                         scale=1.0 / float(hd) ** 0.5)
+    out = out[:, :, :t, :hd].reshape(b, kh, g, t, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, t, h, hd)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_fwd_ref(q, k, v, causal=True):
+    """q (BK, G, T, hd); k, v (BK, S, hd)."""
+    bk, g, t, hd = q.shape
+    s = k.shape[1]
+    scores = jnp.einsum("bgtd,bsd->bgts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(t)[:, None]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgts,bsd->bgtd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: flash decoding (single-token attention vs KV cache).
+
+Decode reads a (B, S, K, hd) cache for one new token per sequence — purely
+memory-bound; the kernel's job is to stream the cache through VMEM exactly
+once at full HBM bandwidth.  Grid = (batch*kv_head, cache blocks); running
+(m, l, acc) softmax statistics live in VMEM scratch across the block axis;
+per-sequence valid lengths arrive via scalar prefetch and mask tail blocks.
+
+VMEM per step: one (SBLK, hd) K tile + V tile + (G, hd) accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SBLK = 512
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def flash_decode_call(lengths: jax.Array, q: jax.Array, k: jax.Array, v: jax.Array,
+                      interpret: bool = False, scale: float | None = None) -> jax.Array:
+    """lengths (BK,) int32 valid cache length per row; q (BK, G, hd);
+    k, v (BK, S, hd).  Returns (BK, G, hd) float32."""
+    bk, g, hd = q.shape
+    s = k.shape[1]
+    assert s % SBLK == 0
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+
+    def kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        b = pl.program_id(0)
+        sj = pl.program_id(1)
+
+        @pl.when(sj == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        qb = q_ref[0].astype(jnp.float32) * scale  # (G, hd)
+        kb = k_ref[0].astype(jnp.float32)  # (SBLK, hd)
+        vb = v_ref[0].astype(jnp.float32)
+        scores = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)  # (G, SBLK)
+        kpos = sj * SBLK + jax.lax.broadcasted_iota(jnp.int32, (g, SBLK), 1)
+        valid = kpos < len_ref[b]
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, scores.max(-1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+        @pl.when(sj == pl.num_programs(1) - 1)
+        def _emit():
+            o_ref[0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bk, s // SBLK),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, sj, len_ref: (b, 0, 0)),
+            pl.BlockSpec((1, SBLK, hd), lambda b, sj, len_ref: (b, sj, 0)),
+            pl.BlockSpec((1, SBLK, hd), lambda b, sj, len_ref: (b, sj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, sj, len_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bk, g, hd), jnp.float32),
+        interpret=interpret,
+    )(lengths, q, k, v)

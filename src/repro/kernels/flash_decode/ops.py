@@ -1,0 +1,32 @@
+"""User-facing flash decoding in model layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import SBLK, flash_decode_call
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 positions: jax.Array, interpret: bool = False) -> jax.Array:
+    """q (B, 1, H, hd); caches (B, S, K, hd); positions (B,) current index
+    (attends to [0, position]).  Returns (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    ps = (-s) % SBLK
+    pd = (-hd) % 128
+    qk = q[:, 0].reshape(b, kh, g, hd).reshape(b * kh, g, hd)
+    kk = jnp.moveaxis(k_cache, 1, 2).reshape(b * kh, s, hd)
+    vk = jnp.moveaxis(v_cache, 1, 2).reshape(b * kh, s, hd)
+    if pd:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, pd)))
+    if ps or pd:
+        kk = jnp.pad(kk, ((0, 0), (0, ps), (0, pd)))
+        vk = jnp.pad(vk, ((0, 0), (0, ps), (0, pd)))
+    lengths = jnp.repeat(positions.astype(jnp.int32) + 1, kh)
+    out = flash_decode_call(lengths, qk, kk, vk, interpret=interpret,
+                            scale=1.0 / float(hd) ** 0.5)
+    out = out[:, :, :hd].reshape(b, kh, g, hd).reshape(b, 1, h, hd)
+    return out.astype(q.dtype)

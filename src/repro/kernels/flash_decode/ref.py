@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_decode_ref(lengths, q, k, v):
+    """lengths (BK,); q (BK, G, hd); k, v (BK, S, hd) -> (BK, G, hd)."""
+    bk, g, hd = q.shape
+    s = k.shape[1]
+    scores = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / np.sqrt(hd)
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: grouped expert GEMM (the MoE dispatch-buffer matmul).
+
+    out[e, c, f] = sum_d buf[e, c, d] * w[e, d, f]
+
+One MXU matmul per (expert, C-block, F-block) grid step; the expert's weight
+tile streams once per (cblk=0) and stays in VMEM across the C axis (grid
+iteration order is minor-to-major, so c is innermost when listed last).
+
+VMEM per step (defaults): buf tile CBLK*DBLK + w tile DBLK*FBLK + out tile
+CBLK*FBLK in f32 ≈ 128*512*4 * 3 ≈ 0.8 MiB.  The D axis is looped inside the
+kernel with a VMEM accumulator so arbitrary d_model fits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CBLK = 128
+FBLK = 512
+DBLK = 512
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_gemm_call(buf: jax.Array, w: jax.Array, interpret: bool = False) -> jax.Array:
+    """buf (E, C, D), w (E, D, F) -> (E, C, F) float32."""
+    e, c, d = buf.shape
+    f = w.shape[2]
+    assert c % CBLK == 0 and f % FBLK == 0 and d % DBLK == 0
+
+    def kernel(b_ref, w_ref, o_ref, acc):
+        di = pl.program_id(3)
+
+        @pl.when(di == 0)
+        def _zero():
+            acc[...] = jnp.zeros_like(acc)
+
+        acc[...] += jax.lax.dot_general(
+            b_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+        @pl.when(di == pl.num_programs(3) - 1)
+        def _emit():
+            o_ref[0] = acc[...]
+
+    grid = (e, c // CBLK, f // FBLK, d // DBLK)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, CBLK, DBLK), lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, DBLK, FBLK), lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, CBLK, FBLK), lambda ei, ci, fi, di: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((CBLK, FBLK), jnp.float32)],
+        interpret=interpret,
+    )(buf, w)

@@ -1,0 +1,20 @@
+"""User-facing grouped expert GEMM (pads C/D/F to kernel tiles)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import CBLK, DBLK, FBLK, moe_gemm_call
+
+
+def moe_gemm(buf: jax.Array, w: jax.Array, interpret: bool = False) -> jax.Array:
+    e, c, d = buf.shape
+    f = w.shape[2]
+    pc, pd, pf = (-c) % CBLK, (-d) % DBLK, (-f) % FBLK
+    if pc or pd:
+        buf = jnp.pad(buf, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    out = moe_gemm_call(buf, w, interpret=interpret)
+    return out[:, :c, :f]

@@ -1,0 +1,355 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh; record memory analysis, cost analysis, and collective traffic.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The two env lines above MUST stay the first statements: jax fixes the device
+count at first init (see MULTI-POD DRY-RUN spec).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import ASSIGNED_ARCHS, get_config
+from ..configs.archs import UIHRDCConfig
+from ..configs.base import GNNConfig, LMConfig, RecsysConfig
+from ..models import steps as steps_mod
+from ..models import transformer
+from ..sharding.specs import (
+    input_specs_sharding_for,
+    opt_state_specs,
+    param_specs_for,
+)
+from ..train.optimizer import OptConfig
+from .hlo_analysis import roofline_terms
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+class _CollProxy:
+    def __init__(self, total: float):
+        self.total_bytes = total
+
+
+def opt_config_for(cfg) -> OptConfig:
+    if isinstance(cfg, LMConfig) and cfg.n_params() > 100e9:
+        return OptConfig(kind="adafactor")
+    return OptConfig(kind="adamw")
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D for LM training (N params, D tokens); analogous
+    useful-work estimates for the other families."""
+    if isinstance(cfg, LMConfig):
+        s = cfg.shapes[shape_name]
+        n = cfg.n_active_params() if cfg.moe else cfg.n_params()
+        if s.kind == "train":
+            return 6.0 * n * s.dims["global_batch"] * s.dims["seq_len"]
+        if s.kind == "prefill":
+            return 2.0 * n * s.dims["global_batch"] * s.dims["seq_len"]
+        # decode: one token per sequence + attention over the cache
+        b = s.dims["global_batch"]
+        t = s.dims["seq_len"]
+        attn = 4.0 * cfg.n_layers * b * t * cfg.n_kv_heads * cfg.head_dim
+        return 2.0 * n * b + attn
+    if isinstance(cfg, GNNConfig):
+        s = cfg.shapes[shape_name]
+        d = s.dims
+        h = cfg.d_hidden
+        if s.kind == "graph_batch":
+            nn, ne, rep = d["n_nodes"] * d["batch"], d["n_edges"] * d["batch"], 1
+        elif s.kind == "graph_mini":
+            b = d["batch_nodes"]
+            f1, f2 = d["fanout"]
+            nn = b + b * f1 + b * f1 * f2
+            ne = b * f1 + b * f1 * f2
+        else:
+            nn, ne = d["n_nodes"], d["n_edges"]
+        mlp = 6.0 * nn * (d.get("d_feat", h) * h + (cfg.n_layers - 1) * 2 * h * h)
+        agg = 6.0 * ne * h
+        return mlp + agg
+    if isinstance(cfg, RecsysConfig):
+        s = cfg.shapes[shape_name]
+        b = s.dims["batch"]
+        mult = 6.0 if s.kind == "train" else 2.0
+        dense = 0
+        if cfg.interaction == "cin":
+            m, k = cfg.n_fields, cfg.embed_dim
+            prev = m
+            for hk in cfg.cin_layers:
+                dense += m * prev * hk * k
+                prev = hk
+            dims = [m * k] + list(cfg.mlp_dims) + [1]
+            dense += sum(a * bb for a, bb in zip(dims[:-1], dims[1:]))
+        elif cfg.interaction == "fm-2way":
+            dense += cfg.n_fields * cfg.embed_dim * 2
+        elif cfg.interaction == "self-attn-seq":
+            t, dd = cfg.seq_len, cfg.embed_dim
+            dense += cfg.n_blocks * (4 * t * dd * dd + 2 * t * t * dd + 8 * t * dd * dd)
+        elif cfg.interaction == "dot":
+            dims = [cfg.embed_dim * 16] + list(cfg.tower_mlp)
+            dense += sum(a * bb for a, bb in zip(dims[:-1], dims[1:])) * 2
+        if s.kind == "retrieval":
+            nc = s.dims["n_candidates"]
+            return 2.0 * nc * (cfg.embed_dim if cfg.interaction != "cin" else dense) + mult * b * dense
+        return mult * b * dense
+    return 0.0
+
+
+# ----------------------------------------------------------------------
+# build the jitted step for one cell
+# ----------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs))."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if isinstance(cfg, LMConfig) and cfg.moe is not None:
+        # grouped MoE dispatch: one token group per data shard (§Perf H2).
+        # iter 3's explicit wsc gather pattern regressed 10x (see §Perf):
+        # adopted config is grouped dispatch + FSDP-D storage, GSPMD-placed.
+        n_dp = int(np.prod([mesh.shape[a] for a in (("pod", "data") if multi_pod else ("data",))]))
+        sdims = cfg.shapes[shape_name].dims
+        n_tok = sdims["global_batch"] * (1 if cfg.shapes[shape_name].kind == "decode"
+                                         else sdims["seq_len"])
+        groups = n_dp if n_tok % n_dp == 0 else 1  # decode b=1: single group
+        cfg = dataclasses.replace(cfg, moe_groups=groups)
+    opt_cfg = opt_config_for(cfg)
+    key = jax.random.PRNGKey(0)
+
+    in_shard = _named(mesh, input_specs_sharding_for(cfg, shape_name, mesh, multi_pod))
+    inputs = cfg.input_specs(shape_name)
+    kind = cfg.shapes[shape_name].kind
+
+    if isinstance(cfg, LMConfig):
+        params_shape = jax.eval_shape(partial(transformer.init_params, cfg), key)
+        pspecs = param_specs_for(cfg, params_shape, mesh, multi_pod)
+        dpa = ("pod", "data") if multi_pod else "data"
+        act_spec = P(dpa, "model", None)  # sequence-parallel residual stream
+        if kind == "train":
+            state_shape = jax.eval_shape(partial(steps_mod.init_state, opt_cfg=opt_cfg), params_shape)
+            sspecs = {
+                "params": pspecs,
+                "opt": opt_state_specs(pspecs, state_shape["opt"]),
+                "step": P(),
+            }
+            step = steps_mod.make_lm_train_step(cfg, opt_cfg, act_spec=act_spec)
+            fn = jax.jit(step,
+                         in_shardings=(_named(mesh, sspecs), in_shard),
+                         out_shardings=(_named(mesh, sspecs), None),
+                         donate_argnums=(0,))
+            return fn, (state_shape, inputs)
+        if kind == "prefill":
+            step = steps_mod.make_lm_prefill_step(cfg, act_spec=act_spec)
+            fn = jax.jit(step, in_shardings=(_named(mesh, pspecs), in_shard["tokens"]))
+            return fn, (params_shape, inputs["tokens"])
+        # decode
+        step = steps_mod.make_lm_decode_step(cfg)
+        fn = jax.jit(step,
+                     in_shardings=(_named(mesh, pspecs), in_shard["tokens"],
+                                   in_shard["positions"], in_shard["kv_cache"]),
+                     out_shardings=(None, in_shard["kv_cache"]),
+                     donate_argnums=(3,))
+        return fn, (params_shape, inputs["tokens"], inputs["positions"], inputs["kv_cache"])
+
+    if isinstance(cfg, GNNConfig):
+        dims = cfg.shapes[shape_name].dims
+        params_shape = jax.eval_shape(
+            partial(steps_mod.init_model_params, cfg, shape_name=shape_name), key)
+        pspecs = param_specs_for(cfg, params_shape, mesh, multi_pod)
+        state_shape = jax.eval_shape(partial(steps_mod.init_state, opt_cfg=opt_cfg), params_shape)
+        sspecs = {"params": pspecs, "opt": opt_state_specs(pspecs, state_shape["opt"]), "step": P()}
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        all_axes = tuple(mesh.axis_names)
+        step = steps_mod.make_gnn_train_step(cfg, opt_cfg, pad_multiple=n_chips,
+                                             shard_axes=all_axes)
+        fn = jax.jit(step,
+                     in_shardings=(_named(mesh, sspecs), in_shard),
+                     out_shardings=(_named(mesh, sspecs), None),
+                     donate_argnums=(0,))
+        return fn, (state_shape, inputs)
+
+    if isinstance(cfg, UIHRDCConfig):
+        # the paper's own architecture: document-partitioned batched AND
+        # queries over the anchored compressed index (serving.engine)
+        from ..serving.engine import make_uihrdc_serve_step
+
+        full = tuple(mesh.axis_names)
+        nc, nt, el = cfg.c_entries, cfg.n_terms, cfg.expand_len
+        index_shapes = {
+            "anchors": jax.ShapeDtypeStruct((nc,), jnp.int32),
+            "c_offsets": jax.ShapeDtypeStruct((nt + 1,), jnp.int32),
+            "expand": jax.ShapeDtypeStruct((nc, el), jnp.int32),
+            "expand_valid": jax.ShapeDtypeStruct((nc, el), jnp.bool_),
+            "lengths": jax.ShapeDtypeStruct((nt,), jnp.int32),
+        }
+        from ..sharding.specs import best_div_axes
+
+        ca = best_div_axes(nc, mesh, full)
+        # §Perf H5: anchors (4B/entry) replicated -> the 32-step binary
+        # search gathers locally; only the expand-row verification (the big
+        # table) stays sharded and costs one remote gather per probe
+        index_shard = {
+            "anchors": NamedSharding(mesh, P(None)),
+            "c_offsets": NamedSharding(mesh, P(None)),
+            "expand": NamedSharding(mesh, P(ca, None)),
+            "expand_valid": NamedSharding(mesh, P(ca, None)),
+            "lengths": NamedSharding(mesh, P(None)),
+        }
+        serve = make_uihrdc_serve_step(max_terms=cfg.max_terms)
+        fn = jax.jit(serve, in_shardings=(index_shard, in_shard["query_terms"],
+                                          in_shard["query_lens"]))
+        return fn, (index_shapes, inputs["query_terms"], inputs["query_lens"])
+
+    if isinstance(cfg, RecsysConfig):
+        params_shape = jax.eval_shape(partial(steps_mod.init_model_params, cfg), key)
+        pspecs = param_specs_for(cfg, params_shape, mesh, multi_pod)
+        if kind == "train":
+            state_shape = jax.eval_shape(partial(steps_mod.init_state, opt_cfg=opt_cfg), params_shape)
+            sspecs = {"params": pspecs, "opt": opt_state_specs(pspecs, state_shape["opt"]), "step": P()}
+            step = steps_mod.make_recsys_train_step(cfg, opt_cfg)
+            fn = jax.jit(step,
+                         in_shardings=(_named(mesh, sspecs), in_shard),
+                         out_shardings=(_named(mesh, sspecs), None),
+                         donate_argnums=(0,))
+            return fn, (state_shape, inputs)
+        n_chips_l = int(np.prod(list(mesh.shape.values())))
+        serve = steps_mod.make_recsys_serve_step(
+            cfg, retrieval=(kind == "retrieval"),
+            cand_shard_axes=tuple(mesh.axis_names), cand_pad_multiple=n_chips_l * 16,
+            serve_dtype=jnp.bfloat16 if kind == "retrieval" else None)
+
+        def serve_pos(params, inputs_dict):
+            return serve(params, **inputs_dict)
+
+        fn = jax.jit(serve_pos, in_shardings=(_named(mesh, pspecs), in_shard))
+        return fn, (params_shape, inputs)
+
+    raise TypeError(type(cfg))
+
+
+# ----------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None = None,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cfg = get_config(arch)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+                 "multi_pod": multi_pod, "n_chips": n_chips}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_cell(arch, shape_name, mesh, multi_pod)
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            xla_cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        hc = analyze_hlo(hlo)  # trip-count-aware FLOPs/bytes/collectives
+        mf = model_flops_for(cfg, shape_name)
+        roof = roofline_terms(
+            {"flops": hc.flops, "bytes accessed": hc.hbm_bytes},
+            _CollProxy(hc.collective_bytes), n_chips, model_flops=mf)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "total_per_device_gib": round(
+                    (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+            },
+            "collectives": {"bytes_by_op": hc.bytes_by_op, "count_by_op": hc.count_by_op,
+                            "total_bytes": int(hc.collective_bytes)},
+            "hlo_cost": hc.as_dict(),
+            "xla_cost_analysis": {"flops": float(xla_cost.get("flops", 0.0)),
+                                  "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+                                  "note": "per-while-iteration only (no trip counts)"},
+            "roofline": roof.as_dict(),
+        })
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: OK "
+                  f"compile={rec['compile_s']}s "
+                  f"mem/dev={rec['memory']['total_per_device_gib']}GiB "
+                  f"dominant={roof.dominant} "
+                  f"(comp={roof.compute_s:.4f}s mem={roof.memory_s:.4f}s coll={roof.collective_s:.4f}s)",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: FAIL {rec['error'][:300]}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "multipod" if multi_pod else "singlepod"
+        path = os.path.join(out_dir, f"{arch.replace('.', '_')}__{shape_name}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED_ARCHS for s in get_config(a).shapes]
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = [args.shape] if args.shape else list(get_config(args.arch).shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    results = []
+    for arch, shape in cells:
+        if args.skip_existing:
+            tag = "multipod" if args.multi_pod else "singlepod"
+            p = os.path.join(args.out, f"{arch.replace('.', '_')}__{shape}__{tag}.json")
+            if os.path.exists(p):
+                with open(p) as f:
+                    old = json.load(f)
+                if old.get("status") == "ok":
+                    print(f"skip {arch} x {shape} (cached ok)", flush=True)
+                    continue
+        results.append(run_cell(arch, shape, args.multi_pod, args.out))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Post-SPMD HLO inspection: collective byte counts + roofline terms.
+
+``cost_analysis()`` provides per-device HLO FLOPs and bytes, but not
+collective traffic — we parse the optimized HLO text and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ROOFLINE ANALYSIS spec).
+
+Hardware model: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (constants from the assignment).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_fraction: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "n_chips": self.n_chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_fraction": self.useful_fraction,
+        }
+
+
+def roofline_terms(cost: dict, coll, n_chips: int,
+                   model_flops: float = 0.0) -> Roofline:
+    """``coll`` is any object with a ``total_bytes`` attribute (see
+    ``hlo_cost.HLOCost`` / the dryrun proxy); cost numbers are per-device
+    (the compiled module is the SPMD-partitioned one)."""
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.total_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = cb / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = 0.0
+    if model_flops and flops:
+        useful = model_flops / (flops * n_chips)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=cb, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=model_flops, useful_fraction=useful,
+    )

@@ -1,0 +1,71 @@
+"""Serving driver: build the compressed index over a collection and serve
+batched conjunctive queries (host engine + jitted anchored device path).
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 200 --queries 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.anchors import AnchoredIndex
+from ..core.index import NonPositionalIndex
+from ..data import generate_collection
+from ..serving.engine import QueryEngine, make_uihrdc_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--articles", type=int, default=10)
+    ap.add_argument("--versions", type=int, default=25)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--terms", type=int, default=2)
+    ap.add_argument("--store", type=str, default="repair_skip")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    col = generate_collection(n_articles=args.articles, versions_per_article=args.versions,
+                              words_per_doc=200, seed=args.seed)
+    t0 = time.perf_counter()
+    idx = NonPositionalIndex.build(col.docs, store=args.store)
+    print(f"built {args.store} index over {col.n_docs} docs "
+          f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
+
+    engine = QueryEngine(idx)
+    rng = np.random.default_rng(args.seed)
+    words = [w for w in idx.vocab.id_to_token[:300]]
+    queries = [[words[int(rng.integers(len(words)))] for _ in range(args.terms)]
+               for _ in range(args.queries)]
+
+    t0 = time.perf_counter()
+    results = engine.batch(queries)
+    dt = time.perf_counter() - t0
+    n_hits = sum(len(r) for r in results)
+    print(f"host engine: {args.queries} queries, {n_hits} hits, "
+          f"{1e3 * dt / args.queries:.2f} ms/query")
+
+    aidx = AnchoredIndex.from_store(idx.store)
+    arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+              "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+              "lengths": aidx.lengths}
+    serve = jax.jit(make_uihrdc_serve_step(max_terms=args.terms))
+    qt = np.zeros((args.queries, args.terms), np.int32)
+    for i, q in enumerate(queries):
+        qt[i] = [idx.word_id(w) or 0 for w in q]
+    ql = np.full(args.queries, args.terms, np.int32)
+    vals, mask = serve(arrays, jnp.asarray(qt), jnp.asarray(ql))
+    jax.block_until_ready(mask)
+    t0 = time.perf_counter()
+    vals, mask = serve(arrays, jnp.asarray(qt), jnp.asarray(ql))
+    jax.block_until_ready(mask)
+    dt = time.perf_counter() - t0
+    print(f"device anchored path: {1e3 * dt / args.queries:.2f} ms/query (jitted, batched)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Flash attention with a custom VJP (pure jnp; O(T) residual memory).
+
+The naive differentiation of a blocked-attention ``lax.scan`` stores the
+(m, s, acc) carries of every KV block for the backward pass — hundreds of
+GiB at 4k–32k sequence lengths.  The flash recurrence instead saves only
+(out, lse) and recomputes per-block probabilities in the backward scan
+(Dao et al., FlashAttention; here adapted to GQA + causal masking).
+
+Layout: q (B, T, H, hd); k, v (B, S, K, hd); H = K * G (GQA groups).
+The Pallas TPU kernel in ``repro.kernels.flash_attention`` implements the
+same math for the hardware target; this module is the XLA path used by the
+multi-pod dry-run and the CPU tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _blocks(x: jax.Array, block: int) -> jax.Array:
+    """(B, S, K, hd) -> (nb, B, block, K, hd), zero-padded."""
+    b, s, k, hd = x.shape
+    nb = (s + block - 1) // block
+    pad = nb * block - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return jnp.moveaxis(x.reshape(b, nb, block, k, hd), 1, 0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_kv: int = 1024) -> jax.Array:
+    out, _ = _flash_fwd_impl(q, k, v, causal, block_kv)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, block_kv):
+    b, tq, h, hd = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).astype(jnp.float32).reshape(b, tq, kh, g, hd)
+    kb = _blocks(k, block_kv)
+    vb = _blocks(v, block_kv)
+    nb = kb.shape[0]
+    qpos = jnp.arange(tq)
+
+    def step(carry, blk):
+        m, s, acc = carry
+        kblk, vblk, bidx = blk
+        kpos = bidx * block_kv + jnp.arange(block_kv)
+        scores = jnp.einsum("btkgd,bckd->btkgc", qg, kblk.astype(jnp.float32))
+        valid = (kpos < tk)[None, None, None, None, :]
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])[None, :, None, None, :]
+        scores = jnp.where(valid, scores, NEG_INF)
+        bm = jnp.max(scores, axis=-1)
+        new_m = jnp.maximum(m, bm)
+        p = jnp.exp(scores - new_m[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m - new_m)
+        new_s = s * corr + p.sum(-1)
+        new_acc = acc * corr[..., None] + jnp.einsum(
+            "btkgc,bckd->btkgd", p, vblk.astype(jnp.float32))
+        return (new_m, new_s, new_acc), None
+
+    m0 = jnp.full((b, tq, kh, g), NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((b, tq, kh, g), dtype=jnp.float32)
+    a0 = jnp.zeros((b, tq, kh, g, hd), dtype=jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(step, (m0, s0, a0), (kb, vb, jnp.arange(nb)))
+    s_safe = jnp.maximum(s, 1e-30)
+    out = (acc / s_safe[..., None]).reshape(b, tq, h, hd).astype(q.dtype)
+    lse = m + jnp.log(s_safe)  # (B, T, K, G)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, block_kv):
+    out, lse = _flash_fwd_impl(q, k, v, causal, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, block_kv, res, dout):
+    q, k, v, out, lse = res
+    b, tq, h, hd = q.shape
+    _, tk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / np.sqrt(hd)
+    mm_dtype = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+    qg = q.astype(jnp.float32).reshape(b, tq, kh, g, hd)
+    do = dout.astype(jnp.float32).reshape(b, tq, kh, g, hd)
+    og = out.astype(jnp.float32).reshape(b, tq, kh, g, hd)
+    delta = jnp.sum(do * og, axis=-1)  # (B, T, K, G)
+    kb = _blocks(k, block_kv)
+    vb = _blocks(v, block_kv)
+    nb = kb.shape[0]
+    qpos = jnp.arange(tq)
+
+    def step(dq_acc, blk):
+        kblk, vblk, bidx = blk
+        kpos = bidx * block_kv + jnp.arange(block_kv)
+        scores = jnp.einsum("btkgd,bckd->btkgc", qg * scale, kblk.astype(jnp.float32))
+        valid = (kpos < tk)[None, None, None, None, :]
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])[None, :, None, None, :]
+        p = jnp.exp(jnp.where(valid, scores, NEG_INF) - lse[..., None])
+        p = jnp.where(valid, p, 0.0)  # (B, T, K, G, C)
+        # §Perf H7: p/ds are the largest tensors of the backward; for bf16
+        # models carry them through the matmuls in bf16 (f32 accumulation
+        # via preferred_element_type) — halves their HBM traffic and matches
+        # what the fused MXU kernel does.  f32 models keep exact math.
+        p16 = p.astype(mm_dtype)
+        do16 = do.astype(mm_dtype)
+        dv_blk = jnp.einsum("btkgc,btkgd->bckd", p16, do16,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("btkgd,bckd->btkgc", do16, vblk.astype(mm_dtype),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])  # (B, T, K, G, C)
+        ds16 = ds.astype(mm_dtype)
+        dq_acc = dq_acc + jnp.einsum("btkgc,bckd->btkgd", ds16,
+                                     kblk.astype(mm_dtype),
+                                     preferred_element_type=jnp.float32) * scale
+        dk_blk = jnp.einsum("btkgc,btkgd->bckd", ds16, qg.astype(mm_dtype),
+                            preferred_element_type=jnp.float32) * scale
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, tq, kh, g, hd), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0, (kb, vb, jnp.arange(nb)))
+    dk = jnp.moveaxis(dk_blocks, 0, 1).reshape(b, nb * block_kv, kh, hd)[:, :tk]
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(b, nb * block_kv, kh, hd)[:, :tk]
+    return (dq.reshape(b, tq, h, hd).astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,139 @@
+"""GIN (Graph Isomorphism Network, Xu et al. 2019) via segment ops.
+
+JAX has no sparse message passing; per the assignment, aggregation is
+implemented with ``jax.ops.segment_sum`` over an edge-index → node scatter
+(this IS part of the system).  Three input regimes:
+
+* full-graph  — (N, F) features + (E,) src/dst, node classification;
+* mini-batch  — sampled block (same arrays, produced by the neighbor
+  sampler in ``repro.data.graphs``);
+* batched small graphs — (B, n, F) dense batch, graph classification via
+  sum-readout (the "TU dataset" setting of the GIN paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import GNNConfig
+
+
+def init_params(cfg: GNNConfig, key: jax.Array, d_feat: int, n_classes: int) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 1)
+
+    def w(k, din, dout):
+        return (jax.random.normal(k, (din, dout), jnp.float32) / np.sqrt(din))
+
+    layers = []
+    d_in = d_feat
+    for l in range(cfg.n_layers):
+        k1, k2 = jax.random.split(keys[l])
+        layers.append({
+            "w1": w(k1, d_in, cfg.d_hidden),
+            "b1": jnp.zeros(cfg.d_hidden),
+            "w2": w(k2, cfg.d_hidden, cfg.d_hidden),
+            "b2": jnp.zeros(cfg.d_hidden),
+            "eps": jnp.zeros(()),  # learnable epsilon
+        })
+        d_in = cfg.d_hidden
+    return {
+        "layers": layers,
+        "out_w": w(keys[-1], cfg.d_hidden, n_classes),
+        "out_b": jnp.zeros(n_classes),
+    }
+
+
+def _gin_layer(lp: dict, h: jax.Array, src: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    # sum aggregation: m_v = sum_{u in N(v)} h_u  (edge u->v as (src, dst)).
+    # W1 is applied BEFORE the gather/scatter: W1(sum_u h_u) == sum_u W1(h_u),
+    # so messages move at d_hidden width instead of d_feat (22x less
+    # collective traffic on ogb_products' 1433-dim features — §Perf H3).
+    hw = h @ lp["w1"]
+    # messages travel in bf16 (halves the unavoidable all-gather of hw when
+    # nodes are sharded and edges are arbitrary — §Perf H3b); accumulation
+    # stays f32 through segment_sum's upcast
+    msg = jax.ops.segment_sum(hw.astype(jnp.bfloat16)[src].astype(jnp.float32),
+                              dst, num_segments=n_nodes)
+    z = (1.0 + lp["eps"]) * hw + msg
+    z = jax.nn.relu(z + lp["b1"])
+    return jax.nn.relu(z @ lp["w2"] + lp["b2"])
+
+
+def forward_node(cfg: GNNConfig, params: dict, node_feat: jax.Array,
+                 edge_src: jax.Array, edge_dst: jax.Array) -> jax.Array:
+    """Node classification logits (N, n_classes)."""
+    n = node_feat.shape[0]
+    h = node_feat
+    for lp in params["layers"]:
+        h = _gin_layer(lp, h, edge_src, edge_dst, n)
+    return h @ params["out_w"] + params["out_b"]
+
+
+def forward_graph_batch(cfg: GNNConfig, params: dict, node_feat: jax.Array,
+                        edge_src: jax.Array, edge_dst: jax.Array) -> jax.Array:
+    """Batched small graphs: node_feat (B, n, F), edges (B, E) -> (B, classes)."""
+
+    def one(nf, es, ed):
+        n = nf.shape[0]
+        h = nf
+        for lp in params["layers"]:
+            h = _gin_layer(lp, h, es, ed, n)
+        return h.sum(axis=0)  # sum readout
+
+    pooled = jax.vmap(one)(node_feat, edge_src, edge_dst)
+    return pooled @ params["out_w"] + params["out_b"]
+
+
+def pad_graph_batch(batch: dict, multiple: int, shard_axes=None) -> dict:
+    """Pad node/edge arrays to a multiple of the mesh size and (optionally)
+    apply sharding constraints — production graphs are padded at ingest so
+    every device holds an equal shard; the assigned input shapes are exact,
+    so padding happens as the first op of the step instead."""
+    from jax.sharding import PartitionSpec as P
+
+    n = batch["node_feat"].shape[0]
+    e = batch["edge_src"].shape[0]
+    npad = (-n) % multiple
+    epad = (-e) % multiple
+    if epad and not npad:
+        npad = multiple  # padded edges need a padded node to point at
+    out = dict(batch)
+    out["node_feat"] = jnp.pad(batch["node_feat"], ((0, npad), (0, 0)))
+    if epad:
+        # padded edges aggregate into a padded node (mask=False, never read)
+        fill = jnp.full((epad,), n, jnp.int32)
+        out["edge_src"] = jnp.concatenate([batch["edge_src"], fill])
+        out["edge_dst"] = jnp.concatenate([batch["edge_dst"], fill])
+    if npad and batch["labels"].shape[0] == n:
+        out["labels"] = jnp.pad(batch["labels"], (0, npad))
+        out["train_mask"] = jnp.pad(batch["train_mask"], (0, npad))
+    if shard_axes is not None:
+        wsc = jax.lax.with_sharding_constraint
+        out["node_feat"] = wsc(out["node_feat"], P(shard_axes, None))
+        out["edge_src"] = wsc(out["edge_src"], P(shard_axes))
+        out["edge_dst"] = wsc(out["edge_dst"], P(shard_axes))
+    return out
+
+
+def loss_fn(cfg: GNNConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    if batch["node_feat"].ndim == 3:
+        logits = forward_graph_batch(cfg, params, batch["node_feat"],
+                                     batch["edge_src"], batch["edge_dst"])
+        labels = batch["labels"]
+        mask = batch["train_mask"]
+    else:
+        logits = forward_node(cfg, params, batch["node_feat"],
+                              batch["edge_src"], batch["edge_dst"])
+        labels = batch["labels"]
+        mask = batch["train_mask"]
+        if labels.shape[0] != logits.shape[0]:
+            # mini-batch block: loss only on the seed nodes (first b rows)
+            logits = logits[: labels.shape[0]]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * m) / jnp.maximum(m.sum(), 1.0)
+    acc = jnp.sum((logits.argmax(-1) == labels) * m) / jnp.maximum(m.sum(), 1.0)
+    return loss, {"nll": loss, "acc": acc}

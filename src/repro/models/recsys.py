@@ -1,0 +1,254 @@
+"""RecSys model zoo: FM, xDeepFM (CIN), SASRec, two-tower retrieval.
+
+JAX has no ``nn.EmbeddingBag``; lookups are ``jnp.take`` +
+``jax.ops.segment_sum`` (assignment requirement) — the per-field embedding
+gather below is the hot path, mirrored by the Pallas kernel in
+``repro.kernels.embedding_bag``.
+
+Embedding tables are stored as ONE concatenated (sum(vocab), dim) matrix
+with per-field row offsets: this is how production systems shard tables
+row-wise across hosts, and it lets the dry-run shard a single large array
+over the "model" axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import RecsysConfig
+
+
+# ----------------------------------------------------------------------
+# shared embedding machinery
+# ----------------------------------------------------------------------
+def field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cfg.field_vocab_sizes)]).astype(np.int32)
+
+
+def embed_fields(table: jax.Array, fields: jax.Array, offsets: np.ndarray) -> jax.Array:
+    """fields (B, n_fields) local ids -> (B, n_fields, dim)."""
+    rows = fields + jnp.asarray(offsets[:-1])[None, :]
+    return jnp.take(table, rows, axis=0)
+
+
+def _mlp(x: jax.Array, ws: list, bs: list, act=jax.nn.relu) -> jax.Array:
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w + b
+        if i + 1 < len(ws):
+            x = act(x)
+    return x
+
+
+def _winit(key, din, dout):
+    return jax.random.normal(key, (din, dout), jnp.float32) / np.sqrt(din)
+
+
+# ----------------------------------------------------------------------
+# FM (Rendle 2010)
+# ----------------------------------------------------------------------
+def init_fm(cfg: RecsysConfig, key: jax.Array) -> dict:
+    total = sum(cfg.field_vocab_sizes)
+    k1, k2 = jax.random.split(key)
+    return {
+        "table": jax.random.normal(k1, (total, cfg.embed_dim), jnp.float32) * 0.01,
+        "linear": jax.random.normal(k2, (total,), jnp.float32) * 0.01,
+        "bias": jnp.zeros(()),
+    }
+
+
+def fm_logits(cfg: RecsysConfig, params: dict, fields: jax.Array) -> jax.Array:
+    offs = field_offsets(cfg)
+    rows = fields + jnp.asarray(offs[:-1])[None, :]
+    v = jnp.take(params["table"], rows, axis=0)  # (B, F, K)
+    lin = jnp.take(params["linear"], rows, axis=0).sum(-1)
+    # O(nk) sum-square trick: 0.5 * ((sum v)^2 - sum v^2)
+    s = v.sum(axis=1)
+    s2 = (v * v).sum(axis=1)
+    pair = 0.5 * (s * s - s2).sum(-1)
+    return params["bias"] + lin + pair
+
+
+# ----------------------------------------------------------------------
+# xDeepFM (CIN + deep MLP)
+# ----------------------------------------------------------------------
+def init_xdeepfm(cfg: RecsysConfig, key: jax.Array) -> dict:
+    total = sum(cfg.field_vocab_sizes)
+    m = cfg.n_fields
+    keys = jax.random.split(key, 4 + len(cfg.cin_layers) + len(cfg.mlp_dims) + 1)
+    params = {
+        "table": jax.random.normal(keys[0], (total, cfg.embed_dim), jnp.float32) * 0.01,
+        "linear": jax.random.normal(keys[1], (total,), jnp.float32) * 0.01,
+        "bias": jnp.zeros(()),
+        "cin": [],
+        "mlp_w": [],
+        "mlp_b": [],
+    }
+    prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        params["cin"].append(_winit(keys[2 + i], m * prev, h))  # (m*prev, h)
+        prev = h
+    dims = [m * cfg.embed_dim] + list(cfg.mlp_dims) + [1]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params["mlp_w"].append(_winit(keys[2 + len(cfg.cin_layers) + i], a, b))
+        params["mlp_b"].append(jnp.zeros(b))
+    params["cin_out"] = _winit(keys[-1], sum(cfg.cin_layers), 1)
+    return params
+
+
+def xdeepfm_logits(cfg: RecsysConfig, params: dict, fields: jax.Array) -> jax.Array:
+    offs = field_offsets(cfg)
+    rows = fields + jnp.asarray(offs[:-1])[None, :]
+    x0 = jnp.take(params["table"], rows, axis=0)  # (B, m, K)
+    lin = jnp.take(params["linear"], rows, axis=0).sum(-1)
+    # CIN: x^{l+1}_{h,:} = sum_{i,j} W^l_{h,ij} (x0_i * xl_j) — per-dim outer
+    xl = x0
+    pooled = []
+    for w in params["cin"]:
+        m, hk = x0.shape[1], xl.shape[1]
+        inter = jnp.einsum("bmk,bhk->bmhk", x0, xl)  # (B, m, Hk, K)
+        inter = inter.reshape(inter.shape[0], m * hk, -1)  # (B, m*Hk, K)
+        xl = jnp.einsum("bik,ih->bhk", inter, w)  # (B, H, K)
+        pooled.append(xl.sum(-1))  # (B, H)
+    cin_feat = jnp.concatenate(pooled, axis=-1)
+    cin_term = (cin_feat @ params["cin_out"])[:, 0]
+    deep = _mlp(x0.reshape(x0.shape[0], -1), params["mlp_w"], params["mlp_b"])[:, 0]
+    return params["bias"] + lin + cin_term + deep
+
+
+# ----------------------------------------------------------------------
+# SASRec (self-attentive sequential recommendation)
+# ----------------------------------------------------------------------
+def init_sasrec(cfg: RecsysConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 3 + 6 * cfg.n_blocks)
+    d = cfg.embed_dim
+    params = {
+        "item_emb": jax.random.normal(keys[0], (cfg.n_items, d), jnp.float32) * 0.01,
+        "pos_emb": jax.random.normal(keys[1], (cfg.seq_len, d), jnp.float32) * 0.01,
+        "blocks": [],
+        "final_norm": jnp.ones(d),
+    }
+    for bidx in range(cfg.n_blocks):
+        k = keys[2 + 6 * bidx : 8 + 6 * bidx]
+        params["blocks"].append({
+            "ln1": jnp.ones(d),
+            "wq": _winit(k[0], d, d), "wk": _winit(k[1], d, d), "wv": _winit(k[2], d, d),
+            "wo": _winit(k[3], d, d),
+            "ln2": jnp.ones(d),
+            "w1": _winit(k[4], d, 4 * d), "b1": jnp.zeros(4 * d),
+            "w2": _winit(k[5], 4 * d, d), "b2": jnp.zeros(d),
+        })
+    return params
+
+
+def sasrec_encode(cfg: RecsysConfig, params: dict, hist: jax.Array) -> jax.Array:
+    """hist (B, T) item ids (0 = pad) -> (B, T, d) causal sequence states."""
+    from .layers import rms_norm
+
+    b, t = hist.shape
+    d = cfg.embed_dim
+    h = jnp.take(params["item_emb"], hist, axis=0) + params["pos_emb"][None, :t]
+    mask = (hist > 0)[:, :, None]
+    h = h * mask
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    for blk in params["blocks"]:
+        hn = rms_norm(h, blk["ln1"])
+        q = hn @ blk["wq"]
+        k = hn @ blk["wk"]
+        v = hn @ blk["wv"]
+        nh = max(1, cfg.n_heads)
+        hd = d // nh
+        qh = q.reshape(b, t, nh, hd)
+        kh = k.reshape(b, t, nh, hd)
+        vh = v.reshape(b, t, nh, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / np.sqrt(hd)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, vh).reshape(b, t, d)
+        h = h + o @ blk["wo"]
+        hn = rms_norm(h, blk["ln2"])
+        h = h + jax.nn.relu(hn @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    return rms_norm(h, params["final_norm"]) * mask
+
+
+def sasrec_train_logits(cfg: RecsysConfig, params: dict, hist: jax.Array,
+                        labels: jax.Array, negatives: jax.Array):
+    """BPR-style: score next-item positives vs sampled negatives."""
+    h = sasrec_encode(cfg, params, hist)  # (B, T, d)
+    pos_e = jnp.take(params["item_emb"], labels, axis=0)
+    neg_e = jnp.take(params["item_emb"], negatives, axis=0)
+    pos = jnp.sum(h * pos_e, -1)
+    neg = jnp.sum(h * neg_e, -1)
+    return pos, neg
+
+
+def sasrec_serve_scores(cfg: RecsysConfig, params: dict, hist: jax.Array,
+                        target: jax.Array) -> jax.Array:
+    h = sasrec_encode(cfg, params, hist)[:, -1]  # (B, d)
+    te = jnp.take(params["item_emb"], target, axis=0)
+    return jnp.sum(h * te, -1)
+
+
+def sasrec_retrieval(cfg: RecsysConfig, params: dict, hist: jax.Array,
+                     candidates: jax.Array) -> jax.Array:
+    """Score 1 user against n_candidates items: batched dot, no loop."""
+    h = sasrec_encode(cfg, params, hist)[:, -1]  # (B, d)
+    ce = jnp.take(params["item_emb"], candidates, axis=0)  # (N, d)
+    return h @ ce.T  # (B, N)
+
+
+# ----------------------------------------------------------------------
+# two-tower retrieval
+# ----------------------------------------------------------------------
+N_USER_FIELDS = 16
+
+
+def init_two_tower(cfg: RecsysConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 4 + 2 * len(cfg.tower_mlp))
+    d = cfg.embed_dim
+    params = {
+        "user_table": jax.random.normal(keys[0], (cfg.n_users, d), jnp.float32) * 0.01,
+        "item_table": jax.random.normal(keys[1], (cfg.n_items, d), jnp.float32) * 0.01,
+        "user_mlp_w": [], "user_mlp_b": [],
+        "item_mlp_w": [], "item_mlp_b": [],
+    }
+    dims_u = [d * N_USER_FIELDS] + list(cfg.tower_mlp)
+    dims_i = [d] + list(cfg.tower_mlp)
+    for i, (a, b) in enumerate(zip(dims_u[:-1], dims_u[1:])):
+        params["user_mlp_w"].append(_winit(keys[2 + i], a, b))
+        params["user_mlp_b"].append(jnp.zeros(b))
+    for i, (a, b) in enumerate(zip(dims_i[:-1], dims_i[1:])):
+        params["item_mlp_w"].append(_winit(keys[2 + len(cfg.tower_mlp) + i], a, b))
+        params["item_mlp_b"].append(jnp.zeros(b))
+    return params
+
+
+def tt_user_tower(cfg: RecsysConfig, params: dict, user_feats: jax.Array) -> jax.Array:
+    """user_feats (B, N_USER_FIELDS) hashed ids -> (B, out_dim) normalized."""
+    e = jnp.take(params["user_table"], user_feats % params["user_table"].shape[0], axis=0)
+    x = e.reshape(e.shape[0], -1)
+    u = _mlp(x, params["user_mlp_w"], params["user_mlp_b"])
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def tt_item_tower(cfg: RecsysConfig, params: dict, item_ids: jax.Array) -> jax.Array:
+    e = jnp.take(params["item_table"], item_ids % params["item_table"].shape[0], axis=0)
+    v = _mlp(e, params["item_mlp_w"], params["item_mlp_b"])
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def tt_train_loss(cfg: RecsysConfig, params: dict, user_feats, item_ids, labels):
+    """In-batch sampled softmax (each other item in batch is a negative)."""
+    u = tt_user_tower(cfg, params, user_feats)  # (B, d)
+    v = tt_item_tower(cfg, params, item_ids)  # (B, d)
+    logits = u @ v.T * 20.0  # temperature
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.diag(logp))
+    return loss, {"nll": loss}
+
+
+def tt_retrieval(cfg: RecsysConfig, params: dict, user_feats, candidates) -> jax.Array:
+    u = tt_user_tower(cfg, params, user_feats)  # (B, d)
+    v = tt_item_tower(cfg, params, candidates)  # (N, d)
+    return u @ v.T

@@ -1,0 +1,226 @@
+"""Per-family train_step / serve_step factories.
+
+Every factory returns pure functions of signature
+
+    train_step(state, batch)  -> (state, metrics)
+    serve_step(params, **inputs) -> outputs
+
+suitable for ``jax.jit`` with in/out shardings.  ``state`` is a dict
+{"params": ..., "opt": ..., "step": ...}.  Gradient accumulation
+(microbatching) wraps the loss in a ``lax.scan`` over microbatch slices.
+Optional gradient compression (int8 quantized all-reduce) hooks into the DP
+axis via ``repro.train.grad_compression``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import GNNConfig, LMConfig, RecsysConfig
+from ..train.optimizer import OptConfig, opt_init, opt_update
+from . import gnn, recsys, transformer
+
+
+def init_state(params, opt_cfg: OptConfig) -> dict:
+    return {"params": params, "opt": opt_init(opt_cfg, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _apply_update(opt_cfg: OptConfig, state: dict, grads, metrics: dict) -> tuple[dict, dict]:
+    params, opt, extra = opt_update(opt_cfg, state["params"], grads, state["opt"])
+    metrics = dict(metrics, **extra)
+    return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+
+def _accum_grads(loss_fn: Callable, params, batch: dict, n_micro: int):
+    """Gradient accumulation over n_micro slices of the leading batch dim."""
+    if n_micro <= 1:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def micro(i):
+        return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
+            x, i * (x.shape[0] // n_micro), x.shape[0] // n_micro, 0), batch)
+
+    def body(carry, i):
+        loss_acc, grads_acc = carry
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, micro(i))
+        grads_acc = jax.tree.map(lambda a, g: a + g, grads_acc, grads)
+        return (loss_acc + loss, grads_acc), aux
+
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), aux = jax.lax.scan(body, (0.0, zero_grads), jnp.arange(n_micro))
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    aux = jax.tree.map(lambda a: a[-1], aux)
+    return loss / n_micro, aux, grads
+
+
+# ----------------------------------------------------------------------
+# LM
+# ----------------------------------------------------------------------
+def make_lm_train_step(cfg: LMConfig, opt_cfg: OptConfig, n_micro: int = 1, act_spec=None):
+    def loss(params, batch):
+        return transformer.loss_fn(cfg, params, batch["tokens"], batch["targets"],
+                                   act_spec=act_spec)
+
+    def train_step(state, batch):
+        l, aux, grads = _accum_grads(loss, state["params"], batch, n_micro)
+        state, metrics = _apply_update(opt_cfg, state, grads, {"loss": l, **aux})
+        return state, metrics
+
+    return train_step
+
+
+def make_lm_prefill_step(cfg: LMConfig, act_spec=None):
+    def prefill_step(params, tokens):
+        logits, _, cache = transformer.forward(cfg, params, tokens, return_cache=True,
+                                               act_spec=act_spec, logits_mode="last")
+        return logits[:, 0], cache
+
+    return prefill_step
+
+
+def make_lm_decode_step(cfg: LMConfig):
+    def decode_step(params, tokens, positions, kv_cache):
+        return transformer.decode_step(cfg, params, tokens, positions, kv_cache)
+
+    return decode_step
+
+
+# ----------------------------------------------------------------------
+# GNN
+# ----------------------------------------------------------------------
+def make_gnn_train_step(cfg: GNNConfig, opt_cfg: OptConfig,
+                        pad_multiple: int | None = None, shard_axes=None):
+    def loss(params, batch):
+        return gnn.loss_fn(cfg, params, batch)
+
+    def train_step(state, batch):
+        if pad_multiple and batch["node_feat"].ndim == 2:
+            batch = gnn.pad_graph_batch(batch, pad_multiple, shard_axes)
+        (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(state["params"], batch)
+        state, metrics = _apply_update(opt_cfg, state, grads, {"loss": l, **aux})
+        return state, metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------
+# RecSys
+# ----------------------------------------------------------------------
+def _recsys_loss(cfg: RecsysConfig, params, batch):
+    if cfg.interaction == "fm-2way":
+        logits = recsys.fm_logits(cfg, params, batch["fields"])
+        labels = batch["labels"]
+    elif cfg.interaction == "cin":
+        logits = recsys.xdeepfm_logits(cfg, params, batch["fields"])
+        labels = batch["labels"]
+    elif cfg.interaction == "self-attn-seq":
+        pos, neg = recsys.sasrec_train_logits(cfg, params, batch["hist"],
+                                              batch["labels"], batch["negatives"])
+        valid = (batch["labels"] > 0).astype(jnp.float32)
+        loss = -(jax.nn.log_sigmoid(pos) + jax.nn.log_sigmoid(-neg)) * valid
+        l = loss.sum() / jnp.maximum(valid.sum(), 1.0)
+        return l, {"nll": l}
+    elif cfg.interaction == "dot":
+        return recsys.tt_train_loss(cfg, params, batch["user_feats"],
+                                    batch["item_ids"], batch["labels"])
+    else:
+        raise ValueError(cfg.interaction)
+    # sigmoid binary cross-entropy
+    l = jnp.mean(jax.nn.softplus(logits) - labels * logits)
+    return l, {"nll": l}
+
+
+def make_recsys_train_step(cfg: RecsysConfig, opt_cfg: OptConfig):
+    def loss(params, batch):
+        return _recsys_loss(cfg, params, batch)
+
+    def train_step(state, batch):
+        (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(state["params"], batch)
+        state, metrics = _apply_update(opt_cfg, state, grads, {"loss": l, **aux})
+        return state, metrics
+
+    return train_step
+
+
+def make_recsys_serve_step(cfg: RecsysConfig, retrieval: bool = False,
+                           cand_shard_axes=None, cand_pad_multiple: int = 1,
+                           serve_dtype=None):
+    if retrieval:
+        def serve(params, **inputs):
+            if serve_dtype is not None:
+                # §Perf H4 iter 2: serve in bf16 — halves table-gather and
+                # tower HBM traffic; ranking is ordinal, tolerant to bf16
+                params_l = jax.tree.map(
+                    lambda p: p.astype(serve_dtype)
+                    if hasattr(p, "dtype") and p.dtype == jnp.float32 else p, params)
+            else:
+                params_l = params
+            params = params_l
+            cand = inputs["candidates"]
+            nc = cand.shape[0]
+            if cand_pad_multiple > 1:
+                # §Perf H4: 1,000,000 divides 16 but not 256 — pad to the
+                # next mesh multiple and reshard so the item tower runs on
+                # every chip instead of one model row
+                pad = (-nc) % cand_pad_multiple
+                if pad:
+                    cand = jnp.concatenate([cand, jnp.broadcast_to(cand[:1], (pad,) + cand.shape[1:])])
+                if cand_shard_axes is not None:
+                    from jax.sharding import PartitionSpec as P
+
+                    spec = P(cand_shard_axes, *([None] * (cand.ndim - 1)))
+                    cand = jax.lax.with_sharding_constraint(cand, spec)
+            if cfg.interaction == "self-attn-seq":
+                out = recsys.sasrec_retrieval(cfg, params, inputs["hist"], cand)
+            elif cfg.interaction == "dot":
+                out = recsys.tt_retrieval(cfg, params, inputs["user_feats"], cand)
+            else:
+                # fm / cin: score the candidate matrix directly (batched)
+                fn = recsys.fm_logits if cfg.interaction == "fm-2way" else recsys.xdeepfm_logits
+                out = fn(cfg, params, cand)
+            # candidate axis is last for (B, NC) scores, first for (NC,) logits
+            return out[..., :nc] if out.ndim > 1 else out[:nc]
+
+        return serve
+
+    def serve(params, **inputs):
+        if cfg.interaction == "fm-2way":
+            return recsys.fm_logits(cfg, params, inputs["fields"])
+        if cfg.interaction == "cin":
+            return recsys.xdeepfm_logits(cfg, params, inputs["fields"])
+        if cfg.interaction == "self-attn-seq":
+            return recsys.sasrec_serve_scores(cfg, params, inputs["hist"], inputs["target"])
+        if cfg.interaction == "dot":
+            u = recsys.tt_user_tower(cfg, params, inputs["user_feats"])
+            v = recsys.tt_item_tower(cfg, params, inputs["item_ids"])
+            return jnp.sum(u * v, -1)
+        raise ValueError(cfg.interaction)
+
+    return serve
+
+
+# ----------------------------------------------------------------------
+# init dispatch
+# ----------------------------------------------------------------------
+def init_model_params(cfg, key, shape_name: str | None = None):
+    if isinstance(cfg, LMConfig):
+        return transformer.init_params(cfg, key)
+    if isinstance(cfg, GNNConfig):
+        dims = cfg.shapes[shape_name or "full_graph_sm"].dims
+        return gnn.init_params(cfg, key, dims["d_feat"], dims.get("n_classes", 2))
+    if isinstance(cfg, RecsysConfig):
+        if cfg.interaction == "fm-2way":
+            return recsys.init_fm(cfg, key)
+        if cfg.interaction == "cin":
+            return recsys.init_xdeepfm(cfg, key)
+        if cfg.interaction == "self-attn-seq":
+            return recsys.init_sasrec(cfg, key)
+        if cfg.interaction == "dot":
+            return recsys.init_two_tower(cfg, key)
+    raise TypeError(type(cfg))

@@ -1,0 +1,240 @@
+"""Decoder-only transformer (dense + MoE), functional style.
+
+* stacked layer params (leading ``n_layers`` axis) + ``lax.scan`` → compact
+  HLO even for 61-layer configs;
+* GQA with optional qk-norm (Qwen3), RoPE, SwiGLU;
+* MoE layers via the sort-based capacity dispatch in ``layers.moe_block``;
+* configurable remat policy ("none" | "block") for activation memory;
+* ``forward``  — training/prefill path (blocked causal attention);
+* ``decode_step`` — single-token serve path against a (L,2,B,T,K,hd) cache.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import LMConfig
+from .flash import flash_attention
+from .layers import (
+    MoEDims,
+    apply_rope,
+    decode_attention,
+    moe_block,
+    rms_norm,
+    swiglu,
+)
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def init_params(cfg: LMConfig, key: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kh, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    keys = jax.random.split(key, 16)
+
+    def norm_init(*shape):
+        return jnp.ones(shape, dtype=dt)
+
+    def w(key, *shape, fan_in=None):
+        fan = fan_in if fan_in is not None else shape[-2]
+        return (jax.random.normal(key, shape, dtype=jnp.float32) / np.sqrt(fan)).astype(dt)
+
+    layers: dict = {
+        "attn_norm": norm_init(L, d),
+        "wq": w(keys[0], L, d, h * hd),
+        "wk": w(keys[1], L, d, kh * hd),
+        "wv": w(keys[2], L, d, kh * hd),
+        "wo": w(keys[3], L, h * hd, d, fan_in=h * hd),
+        "ffn_norm": norm_init(L, d),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = norm_init(L, hd)
+        layers["k_norm"] = norm_init(L, hd)
+    if cfg.moe:
+        e, f = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        layers["router"] = w(keys[4], L, d, e)
+        layers["w_gate"] = w(keys[5], L, e, d, f, fan_in=d)
+        layers["w_up"] = w(keys[6], L, e, d, f, fan_in=d)
+        layers["w_down"] = w(keys[7], L, e, f, d, fan_in=f)
+        if cfg.moe.n_shared_experts:
+            fs = cfg.moe.n_shared_experts * f
+            layers["ws_gate"] = w(keys[8], L, d, fs)
+            layers["ws_up"] = w(keys[9], L, d, fs)
+            layers["ws_down"] = w(keys[10], L, fs, d, fan_in=fs)
+    else:
+        f = cfg.d_ff
+        layers["w_gate"] = w(keys[5], L, d, f)
+        layers["w_up"] = w(keys[6], L, d, f)
+        layers["w_down"] = w(keys[7], L, f, d, fan_in=f)
+
+    params = {
+        "embed": w(keys[11], cfg.vocab_size, d, fan_in=d),
+        "layers": layers,
+        "final_norm": norm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = w(keys[12], d, cfg.vocab_size)
+    return params
+
+
+# ----------------------------------------------------------------------
+# layer application
+# ----------------------------------------------------------------------
+def _attn(cfg: LMConfig, lp: dict, x: jax.Array, positions: jax.Array) -> jax.Array:
+    b, t, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("btd,dh->bth", xn, lp["wq"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,dh->bth", xn, lp["wk"]).reshape(b, t, kh, hd)
+    v = jnp.einsum("btd,dh->bth", xn, lp["wv"]).reshape(b, t, kh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, True, min(1024, q.shape[1]))
+    return x + jnp.einsum("bth,hd->btd", o.reshape(b, t, h * hd), lp["wo"])
+
+
+def _ffn(cfg: LMConfig, lp: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    b, t, d = x.shape
+    xn = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        dims = MoEDims(cfg.moe.n_experts, cfg.moe.top_k)
+        y, aux = moe_block(xn.reshape(b * t, d), lp["router"], lp["w_gate"], lp["w_up"],
+                           lp["w_down"], dims, n_groups=cfg.moe_groups,
+                           dp_axes=cfg.moe_dp_axes, ep_axis=cfg.moe_ep_axis)
+        y = y.reshape(b, t, d)
+        if cfg.moe.n_shared_experts:
+            y = y + swiglu(xn, lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+        return x + y, aux
+    return x + swiglu(xn, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.zeros((), jnp.float32)
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array,
+            return_cache: bool = False, act_spec=None, logits_mode: str = "all"):
+    """tokens (B, T) -> logits (B, T, V) [+ kv cache].
+
+    ``act_spec`` (a PartitionSpec for the (B, T, D) residual stream) turns on
+    sequence-parallel activation sharding between layers.
+    ``logits_mode="last"`` computes the LM head only for the final position
+    (prefill): avoids materializing the (B, T, V) tensor."""
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def constrain(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    x = constrain(x)
+
+    def layer(x, lp):
+        x = _attn(cfg, lp, x, positions)
+        x, aux = _ffn(cfg, lp, x)
+        return constrain(x), aux
+
+    if cfg.remat in ("block", "full"):
+        layer = jax.checkpoint(layer)
+
+    cache = None
+    if return_cache:
+        # run layers while collecting per-layer K/V for the cache
+        def layer_c(x, lp):
+            bsz, tq, d = x.shape
+            h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            xn = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("btd,dh->bth", xn, lp["wq"]).reshape(bsz, tq, h, hd)
+            k = jnp.einsum("btd,dh->bth", xn, lp["wk"]).reshape(bsz, tq, kh, hd)
+            v = jnp.einsum("btd,dh->bth", xn, lp["wv"]).reshape(bsz, tq, kh, hd)
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            o = flash_attention(q, k, v, True, min(1024, q.shape[1]))
+            x = x + jnp.einsum("bth,hd->btd", o.reshape(bsz, tq, h * hd), lp["wo"])
+            x, aux = _ffn(cfg, lp, x)
+            x = constrain(x)
+            kv = jnp.stack([k, v]).astype(jnp.bfloat16)  # (2, B, T, K, hd)
+            return x, (aux, kv)
+
+        x, (auxs, kvs) = jax.lax.scan(layer_c, x, params["layers"])
+        cache = kvs  # (L, 2, B, T, K, hd)
+    else:
+        x, auxs = jax.lax.scan(layer, x, params["layers"])
+
+    if logits_mode == "last":
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head)
+    aux = jnp.sum(auxs)
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def loss_fn(cfg: LMConfig, params: dict, tokens: jax.Array, targets: jax.Array,
+            act_spec=None):
+    logits, aux = forward(cfg, params, tokens, act_spec=act_spec)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    if cfg.moe:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+def decode_step(cfg: LMConfig, params: dict, tokens: jax.Array, positions: jax.Array,
+                kv_cache: jax.Array):
+    """One-token decode.
+
+    tokens (B, 1); positions (B,); kv_cache (L, 2, B, T, K, hd).
+    Returns (logits (B, V), updated cache).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(_dtype(cfg))  # (B, 1, D)
+    pos2d = positions[:, None]
+
+    def layer(x, inputs):
+        lp, cache_l = inputs  # cache_l: (2, B, T, K, hd)
+        bq, tq, d = x.shape
+        h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        xn = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("btd,dh->bth", xn, lp["wq"]).reshape(bq, 1, h, hd)
+        k = jnp.einsum("btd,dh->bth", xn, lp["wk"]).reshape(bq, 1, kh, hd)
+        v = jnp.einsum("btd,dh->bth", xn, lp["wv"]).reshape(bq, 1, kh, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+        # insert into cache at current positions
+        k_cache = cache_l[0].at[jnp.arange(bq), positions].set(k[:, 0].astype(cache_l.dtype))
+        v_cache = cache_l[1].at[jnp.arange(bq), positions].set(v[:, 0].astype(cache_l.dtype))
+        o = decode_attention(q, k_cache, v_cache, positions)
+        x = x + jnp.einsum("bth,hd->btd", o.reshape(bq, 1, h * hd), lp["wo"])
+        x, _ = _ffn(cfg, lp, x)
+        return x, jnp.stack([k_cache, v_cache])
+
+    x, new_cache = jax.lax.scan(layer, x, (params["layers"], kv_cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head)[:, 0]
+    return logits, new_cache

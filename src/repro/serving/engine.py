@@ -1,0 +1,109 @@
+"""Batched query serving over the anchored compressed index.
+
+Two tiers:
+
+* :class:`QueryEngine` — host-facing service: parses word/AND/phrase
+  queries against a built index (any list store) with the best intersection
+  path per store; used by the examples and benchmarks.
+
+* :func:`make_uihrdc_serve_step` — the device-side batched AND-query step
+  (the ``uihrdc`` architecture of the dry-run).  Inputs are padded
+  (batch, max_terms) term-id matrices; the step generates candidates from
+  each query's first list via the bounded expansion table and probes the
+  remaining terms through the anchored binary search (``member_batch``).
+  Document-partitioned distribution: each ("pod","data") group holds the
+  index shard of a document range, queries are replicated, per-shard hits
+  are concatenated along the sharded candidate axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.anchors import AnchoredIndex, member_batch
+from ..core.index import NonPositionalIndex
+
+MAX_CAND_ROWS = 64  # candidate C-entries taken from the driving list
+
+
+@dataclass
+class QueryEngine:
+    index: NonPositionalIndex
+
+    def word(self, w: str) -> np.ndarray:
+        return np.asarray(self.index.query_word(w))
+
+    def conjunctive(self, words: list[str]) -> np.ndarray:
+        return np.asarray(self.index.query_and(words))
+
+    def batch(self, queries: list[list[str]]) -> list[np.ndarray]:
+        return [self.conjunctive(q) if len(q) > 1 else self.word(q[0]) for q in queries]
+
+    def ranked_and(self, words: list[str], k: int = 10) -> np.ndarray:
+        """Google-style ranked AND: intersect, then rank by term frequency
+        proxy (shorter lists = rarer terms weigh more)."""
+        docs = self.conjunctive(words)
+        if len(docs) == 0:
+            return docs
+        weights = np.zeros(len(docs))
+        for w in words:
+            wid = self.index.word_id(w)
+            if wid is None:
+                continue
+            ell = max(1, self.index.store.list_length(wid))
+            weights += np.log1p(self.index.n_docs / ell)
+        order = np.argsort(-weights, kind="stable")
+        return docs[order][:k]
+
+
+# ----------------------------------------------------------------------
+# device-side batched step (uihrdc arch)
+# ----------------------------------------------------------------------
+def candidates_for(idx: AnchoredIndex, list_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """First MAX_CAND_ROWS * expand_len absolute values of each list.
+
+    Returns (values (B, C), valid (B, C)) in cumulative-gap space.
+    """
+    lo = idx.c_offsets[list_ids]
+    hi = idx.c_offsets[list_ids + 1]
+    rows = lo[:, None] + jnp.arange(MAX_CAND_ROWS)[None, :]
+    valid_rows = rows < hi[:, None]
+    rows = jnp.minimum(rows, idx.expand.shape[0] - 1)
+    vals = idx.expand[rows]  # (B, ROWS, L)
+    valid = idx.expand_valid[rows] & valid_rows[:, :, None]
+    b = list_ids.shape[0]
+    return vals.reshape(b, -1), valid.reshape(b, -1)
+
+
+def make_uihrdc_serve_step(max_terms: int = 8):
+    """Returns serve(index_arrays, query_terms, query_lens) ->
+    (candidate postings (B, C), match mask (B, C))."""
+
+    def serve(index: dict, query_terms: jax.Array, query_lens: jax.Array):
+        idx = AnchoredIndex(
+            anchors=index["anchors"],
+            c_offsets=index["c_offsets"],
+            expand=index["expand"],
+            expand_valid=index["expand_valid"],
+            lengths=index["lengths"],
+            expand_len=index["expand"].shape[-1],
+        )
+        b = query_terms.shape[0]
+        first = query_terms[:, 0]
+        cand_vals, cand_valid = candidates_for(idx, first)  # cumulative space
+        nc = cand_vals.shape[1]
+        match = cand_valid
+        for t in range(1, max_terms):
+            term = query_terms[:, t]
+            active = (t < query_lens)[:, None]
+            flat_ids = jnp.repeat(term, nc)
+            flat_vals = (cand_vals - 1).reshape(-1)  # to absolute postings
+            hit = member_batch(idx, flat_ids, flat_vals).reshape(b, nc)
+            match = match & jnp.where(active, hit, True)
+        return cand_vals - 1, match
+
+    return serve

@@ -1,0 +1,123 @@
+"""Document-partitioned anchored index (§Perf H5 iter 2 — the production
+layout for >10^9-posting deployments, DESIGN.md §4).
+
+Each shard owns the postings of one *document range*, re-based to local doc
+ids, with its own anchored Re-Pair arrays.  Per-shard arrays are padded to a
+common size and stacked with a leading shard dim; ``shard_map`` runs every
+probe entirely shard-local (queries replicated, zero collectives inside),
+and results come back as (shards, batch, cand) with global doc ids — the
+classic broadcast-query / local-search / merge-results search topology.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.anchors import AnchoredIndex, build_anchored, member_batch
+from .engine import MAX_CAND_ROWS, candidates_for
+
+
+@dataclass
+class PartitionedAnchoredIndex:
+    arrays: dict[str, jax.Array]  # each with leading (n_shards,) dim
+    doc_bounds: np.ndarray  # (n_shards + 1,) global doc-range boundaries
+    n_shards: int
+    expand_len: int
+
+    @classmethod
+    def build(cls, lists: list[np.ndarray], n_docs: int, n_shards: int,
+              **kw) -> "PartitionedAnchoredIndex":
+        bounds = np.linspace(0, n_docs, n_shards + 1).astype(np.int64)
+        shards: list[AnchoredIndex] = []
+        for s in range(n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            local = []
+            for l in lists:
+                seg = l[(l >= lo) & (l < hi)] - lo  # re-based to local ids
+                local.append(seg if len(seg) else np.asarray([], dtype=np.int64))
+            shards.append(build_anchored(local, **kw))
+        # pad to common sizes and stack
+        max_nc = max(int(a.anchors.shape[0]) for a in shards)
+        el = max(a.expand_len for a in shards)
+        n_terms = len(lists)
+
+        def pad1(x, n, fill=0):
+            return np.pad(np.asarray(x), (0, n - len(x)), constant_values=fill)
+
+        def pad2(x, n, w, fill=0):
+            x = np.asarray(x)
+            return np.pad(x, ((0, n - x.shape[0]), (0, w - x.shape[1])), constant_values=fill)
+
+        arrays = {
+            "anchors": jnp.asarray(np.stack([
+                pad1(a.anchors, max_nc, fill=2**31 - 1) for a in shards]), jnp.int32),
+            "c_offsets": jnp.asarray(np.stack([
+                pad1(a.c_offsets, n_terms + 1, fill=int(a.c_offsets[-1])) for a in shards]), jnp.int32),
+            "expand": jnp.asarray(np.stack([
+                pad2(a.expand, max_nc, el) for a in shards]), jnp.int32),
+            "expand_valid": jnp.asarray(np.stack([
+                pad2(a.expand_valid, max_nc, el) for a in shards])),
+            "lengths": jnp.asarray(np.stack([
+                pad1(a.lengths, n_terms) for a in shards]), jnp.int32),
+            "doc_base": jnp.asarray(bounds[:-1], jnp.int32),
+        }
+        return cls(arrays=arrays, doc_bounds=bounds, n_shards=n_shards, expand_len=el)
+
+
+def _local_serve(local: dict, query_terms: jax.Array, query_lens: jax.Array,
+                 max_terms: int):
+    """Shard-local AND queries (same logic as engine.make_uihrdc_serve_step)."""
+    idx = AnchoredIndex(
+        anchors=local["anchors"], c_offsets=local["c_offsets"],
+        expand=local["expand"], expand_valid=local["expand_valid"],
+        lengths=local["lengths"], expand_len=local["expand"].shape[-1])
+    b = query_terms.shape[0]
+    cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0])
+    nc = cand_vals.shape[1]
+    match = cand_valid
+    for t in range(1, max_terms):
+        term = query_terms[:, t]
+        active = (t < query_lens)[:, None]
+        flat_ids = jnp.repeat(term, nc)
+        flat_vals = (cand_vals - 1).reshape(-1)
+        hit = member_batch(idx, flat_ids, flat_vals).reshape(b, nc)
+        match = match & jnp.where(active, hit, True)
+    # back to global doc ids
+    return cand_vals - 1 + local["doc_base"][0], match
+
+
+def make_partitioned_serve_step(max_terms: int, mesh, shard_axis: str = "data"):
+    """Returns serve(arrays, query_terms, query_lens) -> (vals, mask), each
+    (n_shards, B, C); every probe is shard-local under shard_map."""
+
+    in_specs = (
+        {k: P(shard_axis, *([None] * (v - 1))) for k, v in
+         {"anchors": 2, "c_offsets": 2, "expand": 3, "expand_valid": 3,
+          "lengths": 2, "doc_base": 1}.items()},
+        P(),  # queries replicated
+        P(),
+    )
+    out_specs = (P(shard_axis, None, None), P(shard_axis, None, None))
+
+    def local_fn(arrays, qt, ql):
+        local = {k: v[0] for k, v in arrays.items() if k != "doc_base"}
+        local["doc_base"] = arrays["doc_base"]
+        vals, mask = _local_serve(local, qt, ql, max_terms)
+        return vals[None], mask[None]
+
+    return jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def merge_results(vals: np.ndarray, mask: np.ndarray) -> list[np.ndarray]:
+    """(S, B, C) -> per-query sorted global doc ids."""
+    s, b, c = vals.shape
+    out = []
+    for qi in range(b):
+        hits = vals[:, qi][mask[:, qi]]
+        out.append(np.unique(hits))
+    return out

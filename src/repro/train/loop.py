@@ -1,0 +1,90 @@
+"""Production train loop: checkpoint/restart, straggler watchdog, metrics.
+
+The loop is host-side orchestration around a jitted train_step:
+
+* auto-resume from the newest *valid* checkpoint (crash recovery);
+* periodic async checkpoints (never blocks the step);
+* straggler watchdog — per-step wall time tracked with an EWMA; steps
+  slower than ``straggler_factor`` x the EWMA are logged with their host id
+  (on multi-host this feeds the controller's replace-node decision; here it
+  exercises the detection path);
+* simple metrics log (jsonl) for the examples/benchmarks to read back.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from ..checkpoint.checkpointer import Checkpointer
+
+
+@dataclass
+class WatchdogStats:
+    ewma_s: float = 0.0
+    n_steps: int = 0
+    stragglers: list[int] = field(default_factory=list)
+
+    def update(self, step: int, dt: float, factor: float = 3.0) -> bool:
+        is_straggler = self.n_steps > 5 and dt > factor * self.ewma_s
+        alpha = 0.1
+        self.ewma_s = dt if self.n_steps == 0 else (1 - alpha) * self.ewma_s + alpha * dt
+        self.n_steps += 1
+        if is_straggler:
+            self.stragglers.append(step)
+        return is_straggler
+
+
+@dataclass
+class TrainLoop:
+    train_step: Callable  # jitted (state, batch) -> (state, metrics)
+    data_iter: Iterator[dict]
+    checkpointer: Checkpointer | None = None
+    ckpt_every: int = 100
+    log_path: str | None = None
+    straggler_factor: float = 3.0
+
+    def run(self, state, n_steps: int, start_step: int = 0) -> tuple[Any, list[dict]]:
+        watchdog = WatchdogStats()
+        logs: list[dict] = []
+        logf = open(self.log_path, "a") if self.log_path else None
+        step = start_step
+        try:
+            for _ in range(n_steps):
+                batch = next(self.data_iter)
+                t0 = time.perf_counter()
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(metrics)
+                dt = time.perf_counter() - t0
+                slow = watchdog.update(step, dt, self.straggler_factor)
+                rec = {"step": step, "dt_s": round(dt, 4), "straggler": slow}
+                rec.update({k: float(np.asarray(v)) for k, v in metrics.items()})
+                logs.append(rec)
+                if logf:
+                    logf.write(json.dumps(rec) + "\n")
+                step += 1
+                if self.checkpointer and step % self.ckpt_every == 0:
+                    self.checkpointer.save(step, state)
+        finally:
+            if self.checkpointer:
+                self.checkpointer.wait()
+            if logf:
+                logf.close()
+        return state, logs
+
+    @staticmethod
+    def resume_or_init(checkpointer: Checkpointer | None, state):
+        """Crash recovery: newest valid checkpoint, else fresh state."""
+        if checkpointer is None:
+            return state, 0
+        try:
+            restored, step = checkpointer.restore_latest_valid(state)
+            return restored, step
+        except FileNotFoundError:
+            return state, 0

@@ -1,0 +1,137 @@
+"""Optimizers (pure pytree transforms): AdamW and Adafactor, with global-norm
+clipping and warmup-cosine schedule.  No optax dependency — the container is
+offline and the math is small.
+
+Adafactor (factored second moment) is the memory-realistic choice for the
+1T-param config: state is O(params/row + params/col) for matrices instead of
+2x params.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), n
+
+
+# ----------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ----------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moments for >=2D params
+# ----------------------------------------------------------------------
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> dict:
+    def vrow(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+    def vcol(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return {
+        "vr": jax.tree.map(vrow, params),
+        "vc": jax.tree.map(vcol, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        if _factored(p):
+            new_vr = decay * vr + (1 - decay) * jnp.mean(g32 * g32, axis=-1)
+            new_vc = decay * vc + (1 - decay) * jnp.mean(g32 * g32, axis=-2)
+            r = new_vr / jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), 1e-30)
+            u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :] + cfg.eps)
+        else:
+            new_vr = decay * vr + (1 - decay) * g32 * g32
+            new_vc = vc
+            u = g32 / (jnp.sqrt(new_vr) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_vr, new_vc
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_vr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_vc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"vr": new_vr, "vc": new_vc, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_init(cfg: OptConfig, params):
+    return adamw_init(params) if cfg.kind == "adamw" else adafactor_init(params)
+
+
+def opt_update(cfg: OptConfig, params, grads, state):
+    fn = adamw_update if cfg.kind == "adamw" else adafactor_update
+    return fn(cfg, params, grads, state)

@@ -1,0 +1,157 @@
+"""Distribution correctness on an 8-device host mesh (subprocess so the
+XLA device-count flag never leaks into other tests)."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.configs import get_config
+from repro.models import steps as steps_mod
+from repro.sharding.specs import param_specs_for, input_specs_sharding_for, opt_state_specs
+from repro.train.optimizer import OptConfig
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+results = {}
+
+# 1) sharded LM train step == single-device train step
+cfg = get_config("granite-3-2b").reduced()
+opt = OptConfig(kind="adamw", warmup_steps=2, total_steps=100)
+key = jax.random.PRNGKey(0)
+params = steps_mod.init_model_params(cfg, key)
+state = steps_mod.init_state(params, opt)
+rng = np.random.default_rng(0)
+B, T = 8, 16
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+         "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)}
+
+step_single = jax.jit(steps_mod.make_lm_train_step(cfg, opt))
+s1, m1 = step_single(jax.tree.map(jnp.copy, state), batch)
+
+pspecs = param_specs_for(cfg, params, mesh, False)
+sspecs = {"params": pspecs, "opt": opt_state_specs(pspecs, state["opt"]), "step": P()}
+named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P))
+bspec = {"tokens": NamedSharding(mesh, P("data", None)), "targets": NamedSharding(mesh, P("data", None))}
+with mesh:
+    state_sh = jax.tree.map(jax.device_put, state, named(sspecs))
+    batch_sh = jax.tree.map(jax.device_put, batch, bspec)
+    step_sharded = jax.jit(steps_mod.make_lm_train_step(cfg, opt),
+                           in_shardings=(named(sspecs), bspec),
+                           out_shardings=(named(sspecs), None))
+    s2, m2 = step_sharded(state_sh, batch_sh)
+results["lm_loss_single"] = float(m1["loss"])
+results["lm_loss_sharded"] = float(m2["loss"])
+d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+                 s1["params"], jax.device_get(s2["params"]))
+results["lm_param_maxdiff"] = max(jax.tree_util.tree_leaves(d))
+
+# 2) grad compression over a real axis
+from repro.train.grad_compression import psum_int8
+from jax import shard_map
+x = jnp.asarray(np.random.default_rng(1).normal(size=(8, 64)), jnp.float32)
+@partial(shard_map, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None))
+def allred(xs):
+    return psum_int8(xs, "data") / 4.0
+with mesh:
+    y = allred(x)
+# each shard has 2 rows; psum/4 = mean over the 4 data shards
+ref = np.mean(np.asarray(x).reshape(4, 2, 64), axis=0)
+got = np.asarray(y).reshape(4, 2, 64)
+results["psum_int8_err"] = float(np.max(np.abs(got - ref[None])))
+
+# 3) elastic reshard: save on 4x2 mesh, restore on 2x4
+from repro.checkpoint.checkpointer import Checkpointer, reshard
+import tempfile
+with tempfile.TemporaryDirectory() as td:
+    ck = Checkpointer(td, async_save=False)
+    ck.save(1, s2)
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    pspecs2 = param_specs_for(cfg, params, mesh2, False)
+    sspecs2 = {"params": pspecs2, "opt": opt_state_specs(pspecs2, state["opt"]), "step": P()}
+    restored, _ = ck.restore(state)
+    with mesh2:
+        re_sharded = reshard(restored, mesh2, sspecs2)
+    d2 = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(np.asarray(a, dtype=np.float32) - np.asarray(b, dtype=np.float32)))),
+                      jax.device_get(s2["params"]), jax.device_get(re_sharded["params"]))
+    results["reshard_maxdiff"] = max(jax.tree_util.tree_leaves(d2))
+
+# 4) uihrdc serve step under document partitioning (data axis)
+from repro.core.anchors import build_anchored
+from repro.serving.engine import make_uihrdc_serve_step
+lists = []
+r2 = np.random.default_rng(7)
+for w in range(20):
+    present = np.repeat(r2.random(40) < 0.4, 10) ^ (r2.random(400) < 0.02)
+    l = np.flatnonzero(present).astype(np.int64)
+    lists.append(l if len(l) else np.asarray([1], dtype=np.int64))
+aidx = build_anchored(lists)
+serve = jax.jit(make_uihrdc_serve_step(max_terms=3))
+index_arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+                "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+                "lengths": aidx.lengths}
+qt = jnp.asarray([[0, 3, 0], [5, 9, 2]], jnp.int32)
+ql = jnp.asarray([2, 3], jnp.int32)
+with mesh:
+    vals, mask = serve(index_arrays, qt, ql)
+ref = np.intersect1d(lists[0], lists[3])
+got = np.unique(np.asarray(vals[0])[np.asarray(mask[0])])
+cand_cap = np.asarray(vals[0]).max()
+results["uihrdc_ok"] = bool(np.array_equal(got, ref[ref <= cand_cap]))
+
+# 5) document-partitioned serving via shard_map (4 shards on the data axis)
+from repro.serving.partitioned import PartitionedAnchoredIndex, make_partitioned_serve_step, merge_results
+pidx = PartitionedAnchoredIndex.build(lists, n_docs=400, n_shards=4)
+serve_p = make_partitioned_serve_step(max_terms=2, mesh=mesh, shard_axis="data")
+qt2 = jnp.asarray([[0, 3], [5, 9]], jnp.int32)
+ql2 = jnp.asarray([2, 2], jnp.int32)
+with mesh:
+    arrays_sh = {k: jax.device_put(v, NamedSharding(mesh, P("data", *([None] * (v.ndim - 1)))))
+                 for k, v in pidx.arrays.items()}
+    pv, pm = serve_p(arrays_sh, qt2, ql2)
+merged = merge_results(np.asarray(pv), np.asarray(pm))
+ref2 = np.intersect1d(lists[0], lists[3])
+results["partitioned_ok"] = bool(np.isin(merged[0], ref2).all() and len(merged[0]) > 0)
+
+print(json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"}, timeout=540, cwd="/root/repo")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_step_matches_single(dist_results):
+    assert abs(dist_results["lm_loss_single"] - dist_results["lm_loss_sharded"]) < 5e-2
+    assert dist_results["lm_param_maxdiff"] < 5e-2
+
+
+def test_psum_int8(dist_results):
+    assert dist_results["psum_int8_err"] < 2e-2
+
+
+def test_elastic_reshard(dist_results):
+    assert dist_results["reshard_maxdiff"] < 1e-6
+
+
+def test_uihrdc_distributed(dist_results):
+    assert dist_results["uihrdc_ok"]
+
+
+def test_partitioned_shard_map(dist_results):
+    assert dist_results["partitioned_ok"]

@@ -1,0 +1,61 @@
+"""The trip-count-aware HLO analyzer vs known-cost programs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    y = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    hc = analyze_hlo(_hlo(lambda a, b: a @ b, x, y))
+    assert abs(hc.flops - 2 * 256 * 512 * 128) / (2 * 256 * 512 * 128) < 0.05
+
+
+def test_scan_multiplies_trip_count():
+    L = 9
+
+    def f(a):
+        def body(c, _):
+            return jnp.tanh(c @ a), None
+
+        out, _ = jax.lax.scan(body, a, None, length=L)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    hc = analyze_hlo(_hlo(f, x))
+    expect = L * 2 * 128**3
+    assert abs(hc.flops - expect) / expect < 0.05
+    assert hc.max_trip == L
+
+
+def test_nested_scan():
+    def f(a):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ a, None
+
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+
+        out, _ = jax.lax.scan(outer, a, None, length=4)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    hc = analyze_hlo(_hlo(f, x))
+    expect = 12 * 2 * 64**3
+    assert abs(hc.flops - expect) / expect < 0.05
+
+
+def test_hbm_bytes_scale_with_size():
+    x1 = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x2 = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    h1 = analyze_hlo(_hlo(lambda a: jnp.tanh(a) * 2, x1))
+    h2 = analyze_hlo(_hlo(lambda a: jnp.tanh(a) * 2, x2))
+    assert h2.hbm_bytes > 8 * h1.hbm_bytes  # 16x the elements

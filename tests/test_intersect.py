@@ -1,0 +1,34 @@
+"""Intersection algorithms vs set semantics (paper §2.1)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.intersect import (
+    intersect_bys,
+    intersect_merge,
+    intersect_multi,
+    intersect_svs,
+)
+
+sets = st.lists(st.integers(0, 3000), min_size=0, max_size=400).map(
+    lambda xs: np.unique(np.asarray(xs, dtype=np.int64)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=sets, b=sets)
+def test_pairwise_algorithms(a, b):
+    ref = np.intersect1d(a, b)
+    assert np.array_equal(intersect_merge(a, b), ref)
+    s, l = (a, b) if len(a) <= len(b) else (b, a)
+    assert np.array_equal(intersect_svs(s, l), ref)
+    assert np.array_equal(intersect_bys(a, b), ref)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lists=st.lists(sets, min_size=1, max_size=5))
+def test_multi(lists):
+    ref = lists[0]
+    for l in lists[1:]:
+        ref = np.intersect1d(ref, l)
+    assert np.array_equal(intersect_multi(lists), ref)

@@ -1,0 +1,63 @@
+"""LZ77 / LZ-End parser invariants (paper §2.4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lz import lz77_parse, lzend_parse
+from repro.core.lz_store import VbyteLZendStore
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.lists(st.integers(0, 7), min_size=1, max_size=400))
+def test_lz77_roundtrip(data):
+    t = np.asarray(data, dtype=np.int64)
+    p = lz77_parse(t)
+    assert np.array_equal(p.decode(), t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.lists(st.integers(0, 7), min_size=1, max_size=400))
+def test_lzend_roundtrip(data):
+    t = np.asarray(data, dtype=np.int64)
+    p = lzend_parse(t)
+    assert np.array_equal(p.decode(), t)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.lists(st.integers(0, 5), min_size=2, max_size=300),
+       seed=st.integers(0, 100))
+def test_extract_windows(data, seed):
+    t = np.asarray(data, dtype=np.int64)
+    rng = np.random.default_rng(seed)
+    for parse in (lz77_parse(t), lzend_parse(t)):
+        i = int(rng.integers(0, len(t)))
+        j = int(rng.integers(i, len(t)))
+        assert np.array_equal(parse.extract(i, j), t[i : j + 1])
+
+
+def test_lzend_sources_end_at_phrase_ends():
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 4, 100)
+    t = np.concatenate([base] * 5 + [rng.integers(0, 4, 50)])
+    p = lzend_parse(t)
+    ends = set(p.ends.tolist())
+    for i in range(p.n_phrases):
+        if p.length[i] > 0:
+            assert int(p.ends[int(p.src[i])]) in ends  # source is a phrase end
+
+
+def test_lz77_fewer_phrases_than_lzend():
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 8, 300)
+    t = np.concatenate([base] * 8)
+    p77, pend = lz77_parse(t), lzend_parse(t)
+    assert p77.n_phrases <= pend.n_phrases  # LZ77 is the stronger parse
+
+
+def test_vbyte_lzend_store(rep_lists):
+    st_ = VbyteLZendStore.build(rep_lists[:12])
+    for i in range(12):
+        assert np.array_equal(st_.get_list(i), rep_lists[i])
+    assert st_.size_in_bits > 0

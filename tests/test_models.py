@@ -1,0 +1,175 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+shape checks, finiteness; decode/prefill parity for LMs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import gnn as gnn_mod
+from repro.models import steps as steps_mod
+from repro.train.optimizer import OptConfig
+
+OPT = OptConfig(kind="adamw", warmup_steps=2, total_steps=100)
+KEY = jax.random.PRNGKey(0)
+rng = np.random.default_rng(0)
+
+
+def finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating))
+
+
+LM_ARCHS = [a for a in ASSIGNED_ARCHS if isinstance(get_config(a), LMConfig)]
+RS_ARCHS = [a for a in ASSIGNED_ARCHS if isinstance(get_config(a), RecsysConfig)]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = steps_mod.init_model_params(cfg, KEY)
+    state = steps_mod.init_state(params, OPT)
+    B, T = 2, 16
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)}
+    step = jax.jit(steps_mod.make_lm_train_step(cfg, OPT))
+    state, m = step(state, batch)
+    l0 = float(m["loss"])
+    state, m = step(state, batch)
+    assert finite(m) and float(m["loss"]) < l0 + 1.0
+    # decode one token against a cache produced by prefill
+    pf = jax.jit(steps_mod.make_lm_prefill_step(cfg))
+    logits_last, cache = pf(state["params"], batch["tokens"])
+    assert logits_last.shape == (B, cfg.vocab_size)
+    assert cache.shape == (cfg.n_layers, 2, B, T, cfg.n_kv_heads, cfg.head_dim)
+    dec = jax.jit(steps_mod.make_lm_decode_step(cfg))
+    cache_pad = jnp.pad(cache, ((0, 0), (0, 0), (0, 0), (0, 4), (0, 0), (0, 0)))
+    logits, new_cache = dec(state["params"], batch["tokens"][:, :1],
+                            jnp.full((B,), T, jnp.int32), cache_pad)
+    assert logits.shape == (B, cfg.vocab_size) and finite(logits)
+    assert new_cache.shape == cache_pad.shape
+
+
+def test_lm_decode_matches_forward():
+    """Greedy decode logits == forward logits at the same position."""
+    cfg = get_config("granite-3-2b").reduced()
+    params = steps_mod.init_model_params(cfg, KEY)
+    B, T = 2, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    from repro.models import transformer
+
+    logits_all, _ = transformer.forward(cfg, params, toks)
+    pf = jax.jit(steps_mod.make_lm_prefill_step(cfg))
+    _, cache = pf(params, toks[:, :-1])
+    cache = jnp.pad(cache, ((0, 0), (0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+    dec = jax.jit(steps_mod.make_lm_decode_step(cfg))
+    logits_dec, _ = dec(params, toks[:, -1:], jnp.full((B,), T - 1, jnp.int32), cache)
+    err = float(jnp.max(jnp.abs(logits_dec - logits_all[:, -1].astype(logits_dec.dtype))))
+    assert err < 0.15, err  # bf16 cache quantization tolerance
+
+
+def test_gnn_smoke_all_shapes():
+    cfg = get_config("gin-tu").reduced()
+    N, E, F, C = 60, 240, 12, 3
+    params = gnn_mod.init_params(cfg, KEY, F, C)
+    state = steps_mod.init_state(params, OPT)
+    step = jax.jit(steps_mod.make_gnn_train_step(cfg, OPT))
+    batch = {"node_feat": jnp.asarray(rng.normal(size=(N, F)), jnp.float32),
+             "edge_src": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+             "edge_dst": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, C, N), jnp.int32),
+             "train_mask": jnp.ones(N, bool)}
+    state, m = step(state, batch)
+    assert finite(m)
+    # padded variant agrees with unpadded loss
+    step_pad = jax.jit(steps_mod.make_gnn_train_step(cfg, OPT, pad_multiple=64))
+    state2 = steps_mod.init_state(gnn_mod.init_params(cfg, KEY, F, C), OPT)
+    _, m_pad = step_pad(state2, batch)
+    assert abs(float(m_pad["loss"]) - float(m["loss"])) < 1e-4
+
+
+def test_gnn_minibatch_sampler():
+    from repro.data.graphs import NeighborSampler, synthetic_graph
+
+    g = synthetic_graph(500, 6, 8, 4, seed=1)
+    sampler = NeighborSampler(g)
+    block = sampler.sample_block(np.arange(16), (5, 3))
+    assert block["node_feat"].shape == (16 + 80 + 240, 8)
+    assert block["edge_src"].shape == (320,)
+    assert block["labels"].shape == (16,)
+    cfg = get_config("gin-tu").reduced()
+    params = gnn_mod.init_params(cfg, KEY, 8, 4)
+    state = steps_mod.init_state(params, OPT)
+    step = jax.jit(steps_mod.make_gnn_train_step(cfg, OPT))
+    state, m = step(state, {k: jnp.asarray(v) for k, v in block.items()})
+    assert finite(m)
+
+
+@pytest.mark.parametrize("arch", RS_ARCHS)
+def test_recsys_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = steps_mod.init_model_params(cfg, KEY)
+    state = steps_mod.init_state(params, OPT)
+    from repro.data.pipelines import recsys_batches
+
+    data = recsys_batches(cfg, 16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    step = jax.jit(steps_mod.make_recsys_train_step(cfg, OPT))
+    state, m = step(state, batch)
+    l0 = float(m["loss"])
+    for _ in range(4):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, m = step(state, batch)
+    assert finite(m) and float(m["loss"]) <= l0 + 0.5
+
+
+def test_fm_sum_square_trick():
+    """FM pairwise term equals explicit O(n^2) enumeration."""
+    cfg = get_config("fm").reduced()
+    params = steps_mod.init_model_params(cfg, KEY)
+    from repro.models.recsys import field_offsets, fm_logits
+
+    B = 4
+    fields = jnp.asarray(rng.integers(0, 4, (B, cfg.n_fields)), jnp.int32)
+    got = fm_logits(cfg, params, fields)
+    offs = field_offsets(cfg)
+    rows = fields + jnp.asarray(offs[:-1])[None, :]
+    v = jnp.take(params["table"], rows, axis=0)
+    lin = jnp.take(params["linear"], rows, axis=0).sum(-1)
+    pair = jnp.zeros(B)
+    F = cfg.n_fields
+    for i in range(F):
+        for j in range(i + 1, F):
+            pair = pair + jnp.sum(v[:, i] * v[:, j], -1)
+    ref = params["bias"] + lin + pair
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+def test_moe_capacity_and_gates():
+    """MoE output is a convex combination per token (gates normalized)."""
+    from repro.models.layers import MoEDims, moe_block
+
+    n, d, e, f = 32, 8, 4, 16
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    router = jnp.asarray(rng.normal(size=(d, e)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(e, f, d)) * 0.1, jnp.float32)
+    out, aux = moe_block(x, router, wg, wu, wd, MoEDims(e, 2, capacity_factor=4.0))
+    assert out.shape == (n, d) and bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) > 0
+    # capacity_factor=4 with top2/4 experts: nothing dropped; compare against
+    # dense per-token expert compute
+    probs = jax.nn.softmax(x @ router, -1)
+    g, ei = jax.lax.top_k(probs, 2)
+    g = g / g.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for t in range(n):
+        for kk in range(2):
+            eidx = int(ei[t, kk])
+            h = jax.nn.silu(x[t] @ wg[eidx]) * (x[t] @ wu[eidx])
+            ref = ref.at[t].add(g[t, kk] * (h @ wd[eidx]))
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4

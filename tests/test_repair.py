@@ -1,0 +1,100 @@
+"""Re-Pair grammar invariants + skipping search (paper §4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dgaps import to_dgaps
+from repro.core.intersect import intersect_repair_skip, repair_intersect_multi
+from repro.core.repair import RePairStore, pack_rules, repair_compress
+
+
+def test_grammar_expansion_identity(rep_lists):
+    store = RePairStore.build(rep_lists)
+    for i, l in enumerate(rep_lists):
+        assert np.array_equal(store.get_list(i), l), i
+
+
+def test_phrase_sums_match_expansions(rep_lists):
+    store = RePairStore.build(rep_lists)
+    p = store.packed
+    for k in range(len(p.sums)):
+        sym = p.u + 1 + int(p.rule_pos[k])
+        gaps = store.expand_symbol(sym)
+        assert gaps.sum() == p.sums[k]
+        assert len(gaps) == p.lens[k]
+
+
+def test_depth_is_logarithmic(rep_lists):
+    store = RePairStore.build(rep_lists)
+    p = store.packed
+    if len(p.lens):
+        max_len = int(p.lens.max())
+        # paper §4.4 assumption (2): rule depth O(log expansion)
+        assert p.max_depth <= 2 * max(1, int(np.ceil(np.log2(max_len + 1)))) + 2
+
+
+def test_contains_matches_membership(rep_lists):
+    store = RePairStore.build(rep_lists)
+    for i in (0, 5, 11):
+        s = set(rep_lists[i].tolist())
+        for x in range(0, 2000, 7):
+            assert store.contains(i, x) == (x in s), (i, x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_separators_never_merged(seed):
+    """Phrases must not span lists (paper §4: unique separators)."""
+    rng = np.random.default_rng(seed)
+    lists = [np.unique(rng.integers(0, 500, rng.integers(1, 60))) for _ in range(5)]
+    store = RePairStore.build(lists)
+    for i, l in enumerate(lists):
+        assert np.array_equal(store.get_list(i), l)
+
+
+def test_skip_intersection_exact(rep_lists):
+    store = RePairStore.build(rep_lists, variant="skip")
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        ids = rng.choice(len(rep_lists), size=3, replace=False).tolist()
+        ref = np.intersect1d(np.intersect1d(rep_lists[ids[0]], rep_lists[ids[1]]), rep_lists[ids[2]])
+        got = repair_intersect_multi(store, ids)
+        assert np.array_equal(got, ref)
+
+
+def test_skip_visits_sublinear_ops(rep_lists):
+    """Theorem 1 flavor: compressed-domain ops << decompressed comparisons
+    when intersecting a short list against a long compressed one."""
+    store = RePairStore.build(rep_lists, variant="skip")
+    lengths = [store.list_length(i) for i in range(store.n_lists)]
+    long_i = int(np.argmax(lengths))
+    short_cand = rep_lists[long_i][:: max(1, len(rep_lists[long_i]) // 8)][:8]
+    store.op_counter = 0
+    intersect_repair_skip(store, long_i, short_cand)
+    n = lengths[long_i]
+    n_prime = int(store.c_offsets[long_i + 1] - store.c_offsets[long_i])
+    m = len(short_cand)
+    # O(n' + m(1 + log(n/m))) with a generous constant
+    bound = 8 * (n_prime + m * (1 + np.log2(max(2, n / max(1, m)))) ) + 64
+    assert store.op_counter <= bound, (store.op_counter, bound, n, n_prime)
+
+
+def test_sampling_variants_agree(rep_lists):
+    base = RePairStore.build(rep_lists, variant="skip")
+    ids = [0, 4, 9]
+    ref = repair_intersect_multi(base, ids)
+    for sampling in (("cm", 2), ("cm", 64), ("st", 16), ("st", 256)):
+        st_store = RePairStore.build(rep_lists, variant="skip", sampling=sampling)
+        assert np.array_equal(repair_intersect_multi(st_store, ids), ref), sampling
+
+
+def test_size_accounting_positive(rep_lists):
+    for variant in ("plain", "skip"):
+        store = RePairStore.build(rep_lists, variant=variant)
+        assert store.size_in_bits > 0
+    skip = RePairStore.build(rep_lists, variant="skip")
+    plain = RePairStore.build(rep_lists, variant="plain")
+    # skip data adds the phrase sums: slightly larger, never smaller
+    assert skip.size_in_bits >= plain.size_in_bits * 0.9

@@ -1,0 +1,68 @@
+"""Self-indexes: locate/count/extract vs naive scan (paper Appendix A)."""
+
+import numpy as np
+import pytest
+
+from repro.core.selfindex import LZ77Index, LZEndIndex, RLCSA, SLPIndex, WCSA, WSLPIndex
+
+
+def reptext(seed, nb=100, nc=6, sigma=6, noise=0.04):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(1, sigma, nb)
+    parts = [base]
+    for _ in range(nc):
+        c = base.copy()
+        m = rng.random(nb) < noise
+        c[m] = rng.integers(1, sigma, m.sum())
+        parts.append(c)
+    return np.concatenate(parts)
+
+
+def brute(t, p):
+    m = len(p)
+    return np.asarray([i for i in range(len(t) - m + 1)
+                       if np.array_equal(t[i : i + m], p)], np.int64)
+
+
+ALL = [RLCSA, WCSA, LZ77Index, LZEndIndex, SLPIndex, WSLPIndex]
+
+
+@pytest.mark.parametrize("cls", ALL)
+def test_locate_matches_brute(cls):
+    t = reptext(11)
+    idx = cls(t)
+    rng = np.random.default_rng(1)
+    pats = [t[0:1], t[5:8], t[60:66], np.asarray([4, 4, 4, 4])]
+    for _ in range(4):
+        i = int(rng.integers(0, len(t) - 6))
+        pats.append(t[i : i + int(rng.integers(2, 6))])
+    for p in pats:
+        assert np.array_equal(idx.locate(p), brute(t, p)), (cls.__name__, p.tolist())
+        assert idx.count(p) == len(brute(t, p))
+
+
+@pytest.mark.parametrize("cls", ALL)
+def test_extract(cls):
+    t = reptext(12)
+    idx = cls(t)
+    rng = np.random.default_rng(2)
+    for _ in range(8):
+        i = int(rng.integers(0, len(t) - 1))
+        j = int(rng.integers(i, min(len(t) - 1, i + 40)))
+        assert np.array_equal(idx.extract(i, j), t[i : j + 1]), cls.__name__
+
+
+@pytest.mark.parametrize("cls", ALL)
+def test_absent_pattern(cls):
+    t = reptext(13, sigma=4)
+    idx = cls(t)
+    p = np.asarray([7, 8, 9])  # symbols never used
+    assert idx.count(p) == 0
+
+
+def test_sizes_reflect_repetitiveness():
+    """More repetitive text -> smaller LZ77 self-index."""
+    t_rep = reptext(14, nb=80, nc=14, noise=0.01)
+    t_rand = np.random.default_rng(3).integers(1, 6, len(t_rep))
+    rep_idx, rand_idx = LZ77Index(t_rep), LZ77Index(t_rand)
+    assert rep_idx.size_in_bits < rand_idx.size_in_bits

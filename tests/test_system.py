@@ -1,0 +1,84 @@
+"""End-to-end system behaviour: collection -> compressed indexes -> queries
+-> serving engine; anchored TPU path == CPU skipping path; configs/dry-run
+plumbing sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, all_cells, get_config
+from repro.core.anchors import build_anchored, member_batch
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+from repro.serving.engine import QueryEngine
+
+
+def test_forty_cells_defined():
+    cells = all_cells()
+    assert len(cells) == 40
+    for arch, shape in cells:
+        specs = get_config(arch).input_specs(shape)
+        assert specs, (arch, shape)
+        for k, v in specs.items():
+            assert all(d > 0 for d in v.shape), (arch, shape, k)
+
+
+def test_reduced_configs_exist():
+    for arch in ASSIGNED_ARCHS:
+        r = get_config(arch).reduced()
+        assert r is not None
+
+
+def test_end_to_end_search(small_collection):
+    idx = NonPositionalIndex.build(small_collection.docs, store="repair_skip")
+    engine = QueryEngine(idx)
+    words = [w for w in idx.vocab.id_to_token[:20]]
+    hits = engine.conjunctive([words[1], words[4]])
+    # every reported doc really contains both words
+    for d in hits.tolist():
+        low = small_collection.docs[d].lower()
+        assert words[1] in low and words[4] in low
+    ranked = engine.ranked_and([words[1], words[4]], k=3)
+    assert len(ranked) <= 3
+    assert set(ranked.tolist()) <= set(hits.tolist())
+
+
+def test_anchored_path_matches_cpu_path(small_collection):
+    idx = NonPositionalIndex.build(small_collection.docs, store="repair_skip")
+    store = idx.store
+    lists = [store.get_list(i) for i in range(min(25, store.n_lists))]
+    aidx = build_anchored(lists)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, len(lists), 200).astype(np.int32)
+    vals = rng.integers(0, idx.n_docs + 5, 200).astype(np.int32)
+    got = np.asarray(member_batch(aidx, jnp.asarray(ids), jnp.asarray(vals)))
+    ref = np.asarray([int(v) in set(lists[i].tolist()) for i, v in zip(ids, vals)])
+    assert np.array_equal(got, ref)
+
+
+def test_positional_and_nonpositional_consistency(small_collection):
+    np_idx = NonPositionalIndex.build(small_collection.docs, store="vbyte",
+                                      case_fold=False, drop_stopwords=False)
+    pos_idx = PositionalIndex.build(small_collection.docs, store="vbyte")
+    w = [t for t in pos_idx.vocab.id_to_token if t.isalpha()][5]
+    pos_hits = pos_idx.query_word(w)
+    docs = np.unique(pos_idx.positions_to_docs(pos_hits)[0])
+    np_hits = np_idx.query_word(w)
+    assert np.array_equal(docs, np_hits)
+
+
+def test_compression_improves_with_repetitiveness():
+    frac = {}
+    for edit_rate in (0.002, 0.2):
+        col = generate_collection(n_articles=4, versions_per_article=10,
+                                  words_per_doc=100, edit_rate=edit_rate, seed=2)
+        idx = NonPositionalIndex.build(col.docs, store="repair_skip")
+        frac[edit_rate] = idx.space_fraction
+    assert frac[0.002] < frac[0.2]
+
+
+def test_collection_stats_table():
+    col = generate_collection(n_articles=3, versions_per_article=5, words_per_doc=50)
+    s = col.stats()
+    assert s["versions"] == 15 and s["articles"] == 3
+    assert s["versions_per_article"] == 5.0
