@@ -1,0 +1,75 @@
+"""Serving throughput: queries/sec for word / AND / phrase traffic mixes
+through the planner-routed batched device path, at batch sizes 16/64/256.
+
+The paper's query-time experiments (§5) are per-query microbenchmarks; this
+is the serving-layer complement — padded device batches amortize dispatch
+and the windowed candidate sweep keeps results exact.  Emits a JSON object
+(one entry per (mix, batch_size)) on stdout after the human-readable table.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py
+    PYTHONPATH=src python benchmarks/serving_throughput.py --store repair_skip --probe vmap
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+from repro.data.queries import sample_traffic
+from repro.serving.engine import BatchedServer, QueryEngine
+
+BATCH_SIZES = (16, 64, 256)
+MIXES = ("word", "and", "phrase", "mixed")
+
+
+def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
+        seed: int = 0) -> list[dict]:
+    col = generate_collection(n_articles=10, versions_per_article=25,
+                              words_per_doc=200, seed=seed)
+    idx = NonPositionalIndex.build(col.docs, store=store)
+    pidx = PositionalIndex.build(col.docs, store=store)
+    engine = QueryEngine(idx, positional=pidx,
+                         server=BatchedServer.from_index(idx, probe=probe),
+                         positional_server=BatchedServer.from_index(pidx, probe=probe))
+    host = QueryEngine(idx, positional=pidx)
+    rng = np.random.default_rng(seed)
+
+    words = [w for w in idx.vocab.id_to_token[:300]]
+    rows = []
+    for mix in MIXES:
+        for bs in BATCH_SIZES:
+            queries = sample_traffic(mix, bs, col.docs, words, rng)
+            engine.batch(queries)  # compile / warm caches
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                engine.batch(queries)
+            dev_qps = repeats * bs / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            host.batch(queries)
+            host_qps = bs / (time.perf_counter() - t0)
+            rows.append({"mix": mix, "batch_size": bs, "store": store,
+                         "probe": probe, "device_qps": round(dev_qps, 1),
+                         "host_qps": round(host_qps, 1)})
+            print(f"{mix:>6} b={bs:<4} device {dev_qps:9.1f} q/s   "
+                  f"host {host_qps:9.1f} q/s")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", type=str, default="repair_skip")
+    ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows = run(store=args.store, probe=args.probe, repeats=args.repeats, seed=args.seed)
+    print(json.dumps({"serving_throughput": rows}))
+
+
+if __name__ == "__main__":
+    main()

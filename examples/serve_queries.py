@@ -1,70 +1,72 @@
 """Batched query serving: the paper's compressed index as a service.
 
-Builds the Re-Pair index, then serves a batch of conjunctive queries two
-ways — the host QueryEngine (paper's sequential skipping) and the
-device-side anchored batched step (the TPU-native path, jitted) — and
-checks they agree.
+Builds the Re-Pair indexes (non-positional + positional), then serves a
+mixed batch of word / AND / phrase / ranked top-k queries two ways — the
+host QueryEngine (paper's sequential skipping) and the device-side anchored
+batched steps routed by the query planner (the TPU-native path, jitted,
+windowed so results are exact) — and checks they agree.
 
     PYTHONPATH=src python examples/serve_queries.py
 """
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.anchors import AnchoredIndex
-from repro.core.index import NonPositionalIndex
+from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data import generate_collection
-from repro.serving.engine import QueryEngine, make_uihrdc_serve_step
+from repro.data.queries import sample_traffic
+from repro.serving.engine import BatchedServer, QueryEngine
 
 
 def main() -> None:
     col = generate_collection(n_articles=10, versions_per_article=25,
                               words_per_doc=200, seed=4)
     idx = NonPositionalIndex.build(col.docs, store="repair_skip")
-    engine = QueryEngine(idx)
-    print(f"index: {idx.store.n_lists} terms, {100*idx.space_fraction:.3f}% of collection")
+    pidx = PositionalIndex.build(col.docs, store="repair_skip")
+    print(f"non-positional index: {idx.store.n_lists} terms, "
+          f"{100*idx.space_fraction:.3f}% of collection")
+    print(f"positional index: {pidx.store.n_lists} tokens, "
+          f"{100*pidx.space_fraction:.3f}% of collection")
 
     rng = np.random.default_rng(0)
     words = [w for w in idx.vocab.id_to_token[:200]]
-    queries = [[words[int(rng.integers(len(words)))] for _ in range(2)] for _ in range(32)]
+    # word / AND / phrase / topk round-robin over real collection text
+    queries = sample_traffic("mixed", 32, col.docs, words, rng, n_terms=2, k=5)
 
+    # host path
+    host = QueryEngine(idx, positional=pidx)
     t0 = time.perf_counter()
-    host_results = engine.batch(queries)
+    host_results = host.batch(queries)
     host_ms = 1e3 * (time.perf_counter() - t0)
-    print(f"host engine: 32 queries in {host_ms:.1f} ms")
-    top = engine.ranked_and(queries[0], k=5)
-    print(f"ranked AND {queries[0]} -> top docs {top.tolist()}")
+    print(f"host engine: 32 mixed queries in {host_ms:.1f} ms")
 
-    # device path: anchored index + batched serve step
-    aidx = AnchoredIndex.from_store(idx.store)
-    index_arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
-                    "expand": aidx.expand, "expand_valid": aidx.expand_valid,
-                    "lengths": aidx.lengths}
-    serve = jax.jit(make_uihrdc_serve_step(max_terms=2))
-    qt = np.zeros((32, 2), np.int32)
-    for i, q in enumerate(queries):
-        qt[i] = [idx.word_id(w) if idx.word_id(w) is not None else 0 for w in q]
-    ql = np.full(32, 2, np.int32)
-    vals, mask = serve(index_arrays, jnp.asarray(qt), jnp.asarray(ql))
-    vals, mask = np.asarray(vals), np.asarray(mask)
+    # device path: anchored arrays + planner-routed batched steps
+    engine = QueryEngine(idx, positional=pidx,
+                         server=BatchedServer.from_index(idx),
+                         positional_server=BatchedServer.from_index(pidx))
+    routes = [engine.planner.plan(q) for q in queries]
+    n_dev = sum(1 for p in routes if p.route == "device")
+    print(f"planner: {n_dev}/32 routed to device "
+          f"({sorted(set(p.strategy for p in routes))})")
+    dev_results = engine.batch(queries)  # compile + serve
     t0 = time.perf_counter()
-    vals, mask = serve(index_arrays, jnp.asarray(qt), jnp.asarray(ql))
-    jax.block_until_ready(mask)
+    dev_results = engine.batch(queries)
     dev_ms = 1e3 * (time.perf_counter() - t0)
-    print(f"device (anchored, jitted): 32 queries in {dev_ms:.1f} ms")
+    print(f"device (anchored, jitted, windowed): 32 mixed queries in {dev_ms:.1f} ms")
 
-    # agreement check (device candidates are capped; compare within cap)
-    agree = 0
-    for i, q in enumerate(queries):
-        ref = np.asarray(sorted(set(host_results[i].tolist())))
-        got = np.unique(np.asarray(vals)[i][np.asarray(mask)[i]])
-        cap = np.asarray(vals)[i].max()
-        if np.array_equal(got, ref[ref <= cap]):
-            agree += 1
+    # exact agreement (no candidate cap: windows cover full lists)
+    agree = sum(1 for h, d in zip(host_results, dev_results)
+                if np.array_equal(np.asarray(h), np.asarray(d)))
     print(f"host/device agreement: {agree}/32 queries")
+
+    # phrase answers translate to (doc, offset) pairs
+    pq = next(q for q in queries if q.startswith('"'))
+    pos = engine.batch([pq])[0]
+    docs, offs = pidx.positions_to_docs(np.asarray(pos))
+    print(f"phrase {pq}: {len(pos)} occurrences, first at "
+          f"doc {docs[0] if len(docs) else '-'} offset {offs[0] if len(offs) else '-'}")
+    assert agree == 32, "host/device mismatch"
 
 
 if __name__ == "__main__":

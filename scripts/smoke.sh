@@ -1,0 +1,19 @@
+#!/usr/bin/env sh
+# Tier-1 smoke wrapper: the ROADMAP verify command plus a headless
+# end-to-end serving check. CI-able: exits non-zero on any failure.
+#
+#   scripts/smoke.sh            # full tier-1 + example
+#   scripts/smoke.sh -k serving # extra args are passed to pytest
+set -eu
+
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export PYTHONPATH
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== end-to-end: examples/serve_queries.py =="
+python examples/serve_queries.py
+
+echo "smoke OK"

@@ -5,7 +5,39 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import ABLK, PAD_VAL, QBLK, anchor_probe_2d
+from .kernel import ABLK, PAD_VAL, QBLK, anchor_probe_2d, anchor_probe_sliced_2d
+
+
+def anchor_probe_sliced(queries: jax.Array, lo: jax.Array, hi: jax.Array,
+                        anchors: jax.Array, interpret: bool = False):
+    """Lower bound of each query within its [lo, hi) anchor slice.
+
+    queries/lo/hi (NQ,) int32, anchors (NA,) sorted-per-slice int32.
+    Returns l (NQ,): first j in [lo, hi) with anchors[j] >= q (hi if none).
+    """
+    nq = queries.shape[0]
+    na = anchors.shape[0]
+    qpad = (-nq) % QBLK
+    apad = (-na) % ABLK
+    pad = lambda x: jnp.pad(x.astype(jnp.int32), (0, qpad))[:, None]
+    a = jnp.pad(anchors.astype(jnp.int32), (0, apad), constant_values=PAD_VAL)[None, :]
+    l = anchor_probe_sliced_2d(pad(queries), pad(lo), pad(hi), a, interpret=interpret)
+    return l[:nq, 0]
+
+
+def member_batch_tpu(anchors: jax.Array, c_offsets: jax.Array, expand: jax.Array,
+                     expand_valid: jax.Array, list_ids: jax.Array,
+                     values: jax.Array, interpret: bool = False) -> jax.Array:
+    """Kernel-backed drop-in for ``core.anchors.member_batch``: the probe
+    inner loop of the batched serve step as a tiled compare-and-reduce on
+    the VPU instead of a vmapped fori-loop binary search."""
+    targets = values.astype(jnp.int32) + 1
+    lo = c_offsets[list_ids]
+    hi = c_offsets[list_ids + 1]
+    l = anchor_probe_sliced(targets, lo, hi, anchors, interpret=interpret)
+    j = jnp.maximum(l - 1, lo)
+    ok = expand_valid[j] & (expand[j] == targets[:, None])
+    return ok.any(axis=1) & (lo < hi)
 
 
 def anchor_probe(queries: jax.Array, anchors: jax.Array, interpret: bool = False):

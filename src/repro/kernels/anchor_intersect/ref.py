@@ -11,3 +11,15 @@ def anchor_probe_ref(queries, anchors):
     idx = jnp.searchsorted(anchors, queries, side="right").astype(jnp.int32)
     found = (jnp.take(anchors, jnp.maximum(idx - 1, 0)) == queries) & (idx > 0)
     return idx, found.astype(jnp.int32)
+
+
+def anchor_probe_sliced_ref(queries, lo, hi, anchors):
+    """Per-slice lower bound: first j in [lo, hi) with anchors[j] >= q."""
+    import numpy as np
+
+    q, lo, hi, a = (np.asarray(x) for x in (queries, lo, hi, anchors))
+    out = np.empty(len(q), np.int32)
+    for i in range(len(q)):
+        seg = a[lo[i]:hi[i]]
+        out[i] = lo[i] + int(np.searchsorted(seg, q[i], side="left"))
+    return out

@@ -6,14 +6,13 @@ jax device state.
 
 from __future__ import annotations
 
-import jax
+from ..sharding.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def dp_axes(multi_pod: bool) -> tuple[str, ...]:
@@ -23,5 +22,5 @@ def dp_axes(multi_pod: bool) -> tuple[str, ...]:
 
 def make_local_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (host) devices exist — tests only."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

@@ -1,7 +1,10 @@
-"""Serving driver: build the compressed index over a collection and serve
-batched conjunctive queries (host engine + jitted anchored device path).
+"""Serving driver: build the compressed indexes over a collection and serve
+batched word / AND / phrase / top-k traffic through the query planner
+(host engine + jitted anchored device paths, windowed-exact).
 
-    PYTHONPATH=src python -m repro.launch.serve --docs 200 --queries 64
+    PYTHONPATH=src python -m repro.launch.serve --articles 10 --queries 64
+    PYTHONPATH=src python -m repro.launch.serve --mode phrase --terms 3
+    PYTHONPATH=src python -m repro.launch.serve --mode mixed --probe kernel
 """
 
 from __future__ import annotations
@@ -9,14 +12,12 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.anchors import AnchoredIndex
-from ..core.index import NonPositionalIndex
+from ..core.index import NonPositionalIndex, PositionalIndex
 from ..data import generate_collection
-from ..serving.engine import QueryEngine, make_uihrdc_serve_step
+from ..data.queries import sample_traffic
+from ..serving.engine import BatchedServer, QueryEngine
 
 
 def main() -> None:
@@ -26,6 +27,9 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--terms", type=int, default=2)
     ap.add_argument("--store", type=str, default="repair_skip")
+    ap.add_argument("--mode", type=str, default="and",
+                    choices=["and", "phrase", "topk", "mixed"])
+    ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -33,38 +37,52 @@ def main() -> None:
                               words_per_doc=200, seed=args.seed)
     t0 = time.perf_counter()
     idx = NonPositionalIndex.build(col.docs, store=args.store)
-    print(f"built {args.store} index over {col.n_docs} docs "
+    print(f"built {args.store} non-positional index over {col.n_docs} docs "
           f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
+    need_positional = args.mode in ("phrase", "mixed")
+    pidx = None
+    if need_positional:
+        t0 = time.perf_counter()
+        pidx = PositionalIndex.build(col.docs, store=args.store)
+        print(f"built {args.store} positional index ({100 * pidx.space_fraction:.3f}% "
+              f"of collection) in {time.perf_counter()-t0:.2f}s")
 
-    engine = QueryEngine(idx)
+    engine = QueryEngine(
+        idx, positional=pidx,
+        server=BatchedServer.from_index(idx, probe=args.probe),
+        positional_server=(BatchedServer.from_index(pidx, probe=args.probe)
+                           if pidx is not None else None))
+
     rng = np.random.default_rng(args.seed)
     words = [w for w in idx.vocab.id_to_token[:300]]
-    queries = [[words[int(rng.integers(len(words)))] for _ in range(args.terms)]
-               for _ in range(args.queries)]
+    queries = sample_traffic(args.mode, args.queries, col.docs, words, rng,
+                             n_terms=args.terms)
+    plans = [engine.planner.plan(q) for q in queries]
+    by_route: dict[str, int] = {}
+    for p in plans:
+        by_route[f"{p.route}:{p.strategy}"] = by_route.get(f"{p.route}:{p.strategy}", 0) + 1
+    print(f"planner: {by_route}")
 
+    # host-only baseline
+    host_engine = QueryEngine(idx, positional=pidx)
+    t0 = time.perf_counter()
+    host_results = host_engine.batch(queries)
+    dt = time.perf_counter() - t0
+    n_hits = sum(len(r) for r in host_results)
+    print(f"host engine: {args.queries} queries, {n_hits} hits, "
+          f"{1e3 * dt / args.queries:.2f} ms/query ({args.queries / dt:.0f} q/s)")
+
+    # planned path (device batches, windowed exact) — warm up then time
+    results = engine.batch(queries)
     t0 = time.perf_counter()
     results = engine.batch(queries)
     dt = time.perf_counter() - t0
-    n_hits = sum(len(r) for r in results)
-    print(f"host engine: {args.queries} queries, {n_hits} hits, "
-          f"{1e3 * dt / args.queries:.2f} ms/query")
+    print(f"planned batched path: {1e3 * dt / args.queries:.2f} ms/query "
+          f"({args.queries / dt:.0f} q/s)")
 
-    aidx = AnchoredIndex.from_store(idx.store)
-    arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
-              "expand": aidx.expand, "expand_valid": aidx.expand_valid,
-              "lengths": aidx.lengths}
-    serve = jax.jit(make_uihrdc_serve_step(max_terms=args.terms))
-    qt = np.zeros((args.queries, args.terms), np.int32)
-    for i, q in enumerate(queries):
-        qt[i] = [idx.word_id(w) or 0 for w in q]
-    ql = np.full(args.queries, args.terms, np.int32)
-    vals, mask = serve(arrays, jnp.asarray(qt), jnp.asarray(ql))
-    jax.block_until_ready(mask)
-    t0 = time.perf_counter()
-    vals, mask = serve(arrays, jnp.asarray(qt), jnp.asarray(ql))
-    jax.block_until_ready(mask)
-    dt = time.perf_counter() - t0
-    print(f"device anchored path: {1e3 * dt / args.queries:.2f} ms/query (jitted, batched)")
+    agree = sum(1 for h, d in zip(host_results, results)
+                if np.array_equal(np.asarray(h), np.asarray(d)))
+    print(f"host/planned agreement: {agree}/{args.queries} queries")
 
 
 if __name__ == "__main__":

@@ -1,38 +1,155 @@
 """Batched query serving over the anchored compressed index.
 
-Two tiers:
+Three tiers:
 
-* :class:`QueryEngine` — host-facing service: parses word/AND/phrase
-  queries against a built index (any list store) with the best intersection
-  path per store; used by the examples and benchmarks.
+* :class:`QueryEngine` — host-facing service: executes word / AND / phrase /
+  ranked top-k queries against built indexes (any list store) with the best
+  intersection path per store; used by the examples and benchmarks.
 
-* :func:`make_uihrdc_serve_step` — the device-side batched AND-query step
-  (the ``uihrdc`` architecture of the dry-run).  Inputs are padded
-  (batch, max_terms) term-id matrices; the step generates candidates from
-  each query's first list via the bounded expansion table and probes the
-  remaining terms through the anchored binary search (``member_batch``).
-  Document-partitioned distribution: each ("pod","data") group holds the
-  index shard of a document range, queries are replicated, per-shard hits
-  are concatenated along the sharded candidate axis.
+* The **query planner** (:func:`parse_query`, :class:`QueryPlanner`) —
+  classifies each query (single-word / conjunctive / phrase / ranked top-k),
+  picks the index it must run against (phrase → positional, §5.2; the rest →
+  non-positional, §5.1) and the best execution path for the store backing
+  that index (Re-Pair skipping, sampled seek, merge/SVS on decoded lists, or
+  the batched device path when anchored arrays are resident).
+
+* The device-side batched steps (:func:`make_serve_step`,
+  :class:`BatchedServer`) — padded (batch, max_terms) term-id matrices; each
+  step generates candidates from the query's first list via the bounded
+  expansion table and probes the remaining terms through the anchored binary
+  search (``member_batch``).  Phrase queries probe *shifted* candidates
+  (offset-shifted intersection, paper §3): term ``t`` of a phrase must hold
+  ``position + t``.  Candidate generation is **windowed**: instead of a hard
+  64-candidate truncation, the host driver sweeps ``row_start`` over the
+  driving list's C-entries so arbitrarily long lists are served exactly.
+  Ranked top-k computes the idf-proxy weights of :meth:`QueryEngine.ranked_and`
+  on device and reduces with ``lax.top_k`` inside the step.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import re
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.anchors import AnchoredIndex, member_batch
-from ..core.index import NonPositionalIndex
+from ..core.anchors import AnchoredIndex, build_anchored, member_batch
+from ..core.index import NonPositionalIndex, PositionalIndex
+from ..core.repair import RePairStore
+from ..core.sampled_store import SampledVByteStore
 
-MAX_CAND_ROWS = 64  # candidate C-entries taken from the driving list
+MAX_CAND_ROWS = 64  # candidate C-entries taken from the driving list per window
+
+# query kinds
+WORD = "word"
+AND = "and"
+PHRASE = "phrase"
+TOPK = "topk"
+
+_TOPK_RE = re.compile(r"^top(\d+):\s*(.+)$")
 
 
+@dataclass(frozen=True)
+class ParsedQuery:
+    """A classified query: ``kind`` in {word, and, phrase, topk}."""
+
+    kind: str
+    terms: tuple[str, ...]
+    k: int = 0
+
+
+def parse_query(q) -> ParsedQuery:
+    """Classify a raw query.
+
+    * ``list[str]`` — legacy batch form: one word → word, several → AND;
+    * ``"w"`` — single word;
+    * ``"w1 w2 ..."`` — conjunctive (AND);
+    * ``'"w1 w2 ..."'`` (quoted) — phrase;
+    * ``"top<k>: w1 w2"`` — ranked AND, top-k by idf proxy.
+    """
+    if isinstance(q, ParsedQuery):
+        return q
+    if isinstance(q, (list, tuple)):
+        terms = tuple(q)
+        return ParsedQuery(WORD if len(terms) == 1 else AND, terms)
+    s = q.strip()
+    m = _TOPK_RE.match(s)
+    if m:
+        return ParsedQuery(TOPK, tuple(m.group(2).split()), k=int(m.group(1)))
+    if len(s) >= 2 and s[0] == '"' and s[-1] == '"':
+        return ParsedQuery(PHRASE, tuple(s[1:-1].split()))
+    terms = tuple(s.split())
+    return ParsedQuery(WORD if len(terms) == 1 else AND, terms)
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    query: ParsedQuery
+    index: str  # "nonpositional" | "positional"
+    route: str  # "host" | "device"
+    strategy: str  # host intersection path or device step name
+
+
+def _host_strategy(store) -> str:
+    if isinstance(store, RePairStore):
+        return "repair-skip" if store.variant == "skip" else "repair-decode"
+    if isinstance(store, SampledVByteStore):
+        return "sampled-seek"
+    return "svs-merge"
+
+
+class QueryPlanner:
+    """Routes parsed queries to the best execution path.
+
+    Phrase queries need the positional index; everything else runs on the
+    non-positional one.  Multi-term queries go to the device path when a
+    :class:`BatchedServer` is attached for that index (anchored arrays
+    resident on device); single words and unknown-term queries stay on the
+    host (a word query is a pure list decode — no intersection to batch).
+    """
+
+    def __init__(self, engine: "QueryEngine"):
+        self.engine = engine
+
+    def plan(self, q, prefer_device: bool = True) -> QueryPlan:
+        pq = parse_query(q)
+        if pq.kind == PHRASE:
+            index_name, idx, server = "positional", self.engine.positional, self.engine.positional_server
+        else:
+            index_name, idx, server = "nonpositional", self.engine.index, self.engine.server
+        if idx is None:
+            raise ValueError(f"{pq.kind} query requires the {index_name} index")
+        device_ok = (
+            prefer_device
+            and server is not None
+            and len(pq.terms) > 1
+            and all(_lookup(idx, t) is not None for t in pq.terms)
+        )
+        if device_ok:
+            return QueryPlan(pq, index_name, "device", f"anchored-{pq.kind}")
+        return QueryPlan(pq, index_name, "host", _host_strategy(idx.store))
+
+
+def _lookup(index, term: str):
+    if isinstance(index, PositionalIndex):
+        return index.token_id(term)
+    return index.word_id(term)
+
+
+# ----------------------------------------------------------------------
+# host engine
+# ----------------------------------------------------------------------
 @dataclass
 class QueryEngine:
     index: NonPositionalIndex
+    positional: PositionalIndex | None = None
+    server: "BatchedServer | None" = None  # device path over `index`
+    positional_server: "BatchedServer | None" = None  # device path over `positional`
+
+    def __post_init__(self):
+        self.planner = QueryPlanner(self)
 
     def word(self, w: str) -> np.ndarray:
         return np.asarray(self.index.query_word(w))
@@ -40,8 +157,11 @@ class QueryEngine:
     def conjunctive(self, words: list[str]) -> np.ndarray:
         return np.asarray(self.index.query_and(words))
 
-    def batch(self, queries: list[list[str]]) -> list[np.ndarray]:
-        return [self.conjunctive(q) if len(q) > 1 else self.word(q[0]) for q in queries]
+    def phrase(self, tokens: list[str]) -> np.ndarray:
+        """Positions of the first token of each phrase occurrence (§5.2)."""
+        if self.positional is None:
+            raise ValueError("phrase queries require a PositionalIndex")
+        return np.asarray(self.positional.query_phrase(list(tokens)))
 
     def ranked_and(self, words: list[str], k: int = 10) -> np.ndarray:
         """Google-style ranked AND: intersect, then rank by term frequency
@@ -59,16 +179,61 @@ class QueryEngine:
         order = np.argsort(-weights, kind="stable")
         return docs[order][:k]
 
+    def execute(self, q) -> np.ndarray:
+        """Plan and run one query (host path; device batches go through
+        :meth:`batch`, which groups by kind first)."""
+        pq = parse_query(q)
+        if not pq.terms:  # e.g. '""' or "" — nothing to match
+            return np.zeros(0, dtype=np.int64)
+        if pq.kind == WORD:
+            return self.word(pq.terms[0])
+        if pq.kind == AND:
+            return self.conjunctive(list(pq.terms))
+        if pq.kind == PHRASE:
+            return self.phrase(list(pq.terms))
+        if pq.kind == TOPK:
+            return self.ranked_and(list(pq.terms), k=pq.k or 10)
+        raise ValueError(pq.kind)
+
+    def batch(self, queries: list) -> list[np.ndarray]:
+        """Serve a mixed batch: plan every query, group device-routed ones
+        by kind into padded device batches, run host queries one by one,
+        and return results in the original order."""
+        plans = [self.planner.plan(q) for q in queries]
+        out: list[np.ndarray | None] = [None] * len(queries)
+        groups: dict[tuple, list[int]] = {}
+        for i, pl in enumerate(plans):
+            if pl.route == "device":
+                key = (pl.index, pl.query.kind, pl.query.k)
+                groups.setdefault(key, []).append(i)
+            else:
+                out[i] = self.execute(pl.query)
+        for (index_name, kind, k), idxs in groups.items():
+            server = self.server if index_name == "nonpositional" else self.positional_server
+            sub = [plans[i].query for i in idxs]
+            if kind == TOPK:
+                res = server.topk([list(p.terms) for p in sub], k=k or 10)
+            elif kind == PHRASE:
+                res = server.phrase([list(p.terms) for p in sub])
+            else:
+                res = server.conjunctive([list(p.terms) for p in sub])
+            for i, r in zip(idxs, res):
+                out[i] = r
+        return out
+
 
 # ----------------------------------------------------------------------
-# device-side batched step (uihrdc arch)
+# device-side batched steps (uihrdc arch)
 # ----------------------------------------------------------------------
-def candidates_for(idx: AnchoredIndex, list_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """First MAX_CAND_ROWS * expand_len absolute values of each list.
+def candidates_for(idx: AnchoredIndex, list_ids: jax.Array,
+                   row_start: jax.Array | int = 0) -> tuple[jax.Array, jax.Array]:
+    """MAX_CAND_ROWS * expand_len absolute values of each list, starting at
+    C-entry ``row_start`` of the list (the windowed candidate generator —
+    sweeping ``row_start`` covers lists of any length exactly).
 
     Returns (values (B, C), valid (B, C)) in cumulative-gap space.
     """
-    lo = idx.c_offsets[list_ids]
+    lo = idx.c_offsets[list_ids] + row_start
     hi = idx.c_offsets[list_ids + 1]
     rows = lo[:, None] + jnp.arange(MAX_CAND_ROWS)[None, :]
     valid_rows = rows < hi[:, None]
@@ -79,31 +244,228 @@ def candidates_for(idx: AnchoredIndex, list_ids: jax.Array) -> tuple[jax.Array, 
     return vals.reshape(b, -1), valid.reshape(b, -1)
 
 
-def make_uihrdc_serve_step(max_terms: int = 8):
-    """Returns serve(index_arrays, query_terms, query_lens) ->
-    (candidate postings (B, C), match mask (B, C))."""
+def _probe_terms(idx: AnchoredIndex, query_terms, query_lens, cand_vals, cand_valid,
+                 max_terms: int, phrase: bool, member=None):
+    """AND / phrase probe loop shared by all steps.  For phrase queries term
+    ``t`` probes candidate + t (offset-shifted intersection, §3).  ``member``
+    swaps the probe implementation (vmapped binary search by default; the
+    Pallas tiled-compare kernel via ``probe="kernel"``)."""
+    member = member or member_batch
+    b, nc = cand_vals.shape
+    match = cand_valid
+    for t in range(1, max_terms):
+        term = query_terms[:, t]
+        active = (t < query_lens)[:, None]
+        shift = t if phrase else 0
+        flat_ids = jnp.repeat(term, nc)
+        flat_vals = (cand_vals - 1 + shift).reshape(-1)  # to absolute postings
+        hit = member(idx, flat_ids, flat_vals).reshape(b, nc)
+        match = match & jnp.where(active, hit, True)
+    return match
 
-    def serve(index: dict, query_terms: jax.Array, query_lens: jax.Array):
-        idx = AnchoredIndex(
-            anchors=index["anchors"],
-            c_offsets=index["c_offsets"],
-            expand=index["expand"],
-            expand_valid=index["expand_valid"],
-            lengths=index["lengths"],
-            expand_len=index["expand"].shape[-1],
-        )
-        b = query_terms.shape[0]
-        first = query_terms[:, 0]
-        cand_vals, cand_valid = candidates_for(idx, first)  # cumulative space
-        nc = cand_vals.shape[1]
-        match = cand_valid
-        for t in range(1, max_terms):
-            term = query_terms[:, t]
-            active = (t < query_lens)[:, None]
-            flat_ids = jnp.repeat(term, nc)
-            flat_vals = (cand_vals - 1).reshape(-1)  # to absolute postings
-            hit = member_batch(idx, flat_ids, flat_vals).reshape(b, nc)
-            match = match & jnp.where(active, hit, True)
-        return cand_vals - 1, match
+
+def _kernel_member(interpret: bool):
+    from ..kernels.anchor_intersect.ops import member_batch_tpu
+
+    def member(idx: AnchoredIndex, list_ids, values):
+        return member_batch_tpu(idx.anchors, idx.c_offsets, idx.expand,
+                                idx.expand_valid, list_ids, values,
+                                interpret=interpret)
+
+    return member
+
+
+def _idf_weights(idx: AnchoredIndex, query_terms, query_lens, max_terms: int,
+                 n_docs: float) -> jax.Array:
+    """Per-query idf-proxy weight: sum over active terms of
+    log1p(n_docs / list_len) — the device form of ranked_and's host loop.
+
+    Note this is one scalar per *query* (the non-positional index has no
+    per-document frequencies), so among a query's matches the ranking
+    degenerates to doc-id order — exactly like host ``ranked_and``, whose
+    weight vector is constant too.  The score is still attached to every
+    hit so a downstream per-document ranker can slot in here."""
+    w = jnp.zeros(query_terms.shape[0], jnp.float32)
+    for t in range(max_terms):
+        ell = jnp.maximum(idx.lengths[query_terms[:, t]], 1).astype(jnp.float32)
+        w = w + jnp.where(t < query_lens, jnp.log1p(n_docs / ell), 0.0)
+    return w
+
+
+def _as_anchored(index: dict) -> AnchoredIndex:
+    return AnchoredIndex(
+        anchors=index["anchors"],
+        c_offsets=index["c_offsets"],
+        expand=index["expand"],
+        expand_valid=index["expand_valid"],
+        lengths=index["lengths"],
+        expand_len=index["expand"].shape[-1],
+    )
+
+
+def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
+                    n_docs: float = 0.0, probe: str = "vmap"):
+    """Build a batched device step.
+
+    ``mode`` is "and" (conjunctive doc queries) or "phrase" (offset-shifted
+    positional probes).  With ``topk == 0`` the step returns
+    ``(candidate postings (B, C), match mask (B, C))`` for the window at
+    ``row_start``; with ``topk == k`` it additionally ranks on device and
+    returns ``(top postings (B, k), top scores (B, k), top valid (B, k))``.
+    ``probe="kernel"`` routes the inner membership probes through the Pallas
+    ``anchor_intersect`` tiled-compare kernel (interpret mode off-TPU).
+    """
+    phrase = mode == PHRASE
+    member = None
+    if probe == "kernel":
+        member = _kernel_member(interpret=jax.default_backend() != "tpu")
+
+    def serve(index: dict, query_terms: jax.Array, query_lens: jax.Array,
+              row_start: jax.Array | int = 0):
+        idx = _as_anchored(index)
+        cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0], row_start)
+        match = _probe_terms(idx, query_terms, query_lens, cand_vals, cand_valid,
+                             max_terms, phrase, member=member)
+        if not topk:
+            return cand_vals - 1, match
+        w = _idf_weights(idx, query_terms, query_lens, max_terms, n_docs)
+        scores = jnp.where(match, w[:, None], -jnp.inf)
+        top_scores, top_i = jax.lax.top_k(scores, topk)  # stable: ties → lowest index
+        top_vals = jnp.take_along_axis(cand_vals - 1, top_i, axis=1)
+        return top_vals, top_scores, top_scores > -jnp.inf
 
     return serve
+
+
+def make_uihrdc_serve_step(max_terms: int = 8):
+    """The AND-only step of the ``uihrdc`` dry-run arch (kept as the
+    compiled entry point; see :func:`make_serve_step` for phrase/top-k)."""
+    return make_serve_step(max_terms=max_terms, mode=AND)
+
+
+# ----------------------------------------------------------------------
+# BatchedServer: windowed-exact host driver around the jitted steps
+# ----------------------------------------------------------------------
+@dataclass
+class BatchedServer:
+    """Owns the device-resident anchored arrays for one index plus a cache
+    of jitted steps, and drives the candidate-window sweep so results are
+    exact for lists of any length (no 64-candidate truncation)."""
+
+    host_index: NonPositionalIndex | PositionalIndex
+    arrays: dict[str, jax.Array]
+    n_docs: float  # idf denominator (docs, or tokens for positional)
+    probe: str = "vmap"  # "vmap" | "kernel" (Pallas anchor_intersect)
+    _steps: dict = field(default_factory=dict)
+    # host-side copies of the immutable planning arrays, so encode /
+    # window counting never does a device->host transfer per batch
+    _lengths_np: np.ndarray | None = None
+    _c_offsets_np: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self._lengths_np is None:
+            self._lengths_np = np.asarray(self.arrays["lengths"])
+        if self._c_offsets_np is None:
+            self._c_offsets_np = np.asarray(self.arrays["c_offsets"])
+
+    @classmethod
+    def from_index(cls, index: NonPositionalIndex | PositionalIndex,
+                   expand_len: int = 32, probe: str = "vmap") -> "BatchedServer":
+        store = index.store
+        if isinstance(store, RePairStore):
+            aidx = AnchoredIndex.from_store(store, expand_len=expand_len)
+        else:  # re-anchor from decoded lists (any of the 19 stores)
+            lists = [store.get_list(i) for i in range(store.n_lists)]
+            aidx = build_anchored(lists, expand_len=expand_len)
+        arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+                  "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+                  "lengths": aidx.lengths}
+        n = index.n_docs if isinstance(index, NonPositionalIndex) else index.n_tokens
+        return cls(host_index=index, arrays=arrays, n_docs=float(n), probe=probe)
+
+    # -- encoding -------------------------------------------------------
+    def encode(self, queries: list[list[str]],
+               sort_by_length: bool = False) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Pad term lists to (B, max_terms) id matrices.  Queries with any
+        unknown term are marked invalid (their result is empty; the padded
+        row still flows through the step so shapes stay static).  With
+        ``sort_by_length`` (AND / top-k only — order matters for phrases)
+        the rarest term drives candidate generation, like the host path,
+        which minimizes the window sweep."""
+        width = max(2, max(len(q) for q in queries))
+        lengths = self._lengths_np
+        qt = np.zeros((len(queries), width), np.int32)
+        ql = np.ones(len(queries), np.int32)
+        ok = np.ones(len(queries), bool)
+        for i, q in enumerate(queries):
+            ids = [_lookup(self.host_index, t) for t in q]
+            if any(v is None for v in ids):
+                ok[i] = False
+                continue
+            if sort_by_length:
+                ids = sorted(ids, key=lambda w: lengths[w])
+            qt[i, : len(ids)] = ids
+            ql[i] = len(ids)
+        return qt, ql, ok
+
+    def _step(self, kind: str, width: int, topk: int = 0):
+        key = (kind, width, topk)
+        if key not in self._steps:
+            mode = PHRASE if kind == PHRASE else AND
+            self._steps[key] = jax.jit(make_serve_step(
+                max_terms=width, mode=mode, topk=topk, n_docs=self.n_docs,
+                probe=self.probe))
+        return self._steps[key]
+
+    def _n_windows(self, qt: np.ndarray, ok: np.ndarray) -> int:
+        c_off = self._c_offsets_np
+        first = qt[:, 0][ok] if ok.any() else qt[:1, 0]
+        rows = c_off[first + 1] - c_off[first]
+        return max(1, int(-(-int(rows.max()) // MAX_CAND_ROWS)))
+
+    def _sweep(self, kind: str, queries: list[list[str]]) -> list[np.ndarray]:
+        qt, ql, ok = self.encode(queries, sort_by_length=(kind != PHRASE))
+        step = self._step(kind, qt.shape[1])
+        hits: list[list[np.ndarray]] = [[] for _ in queries]
+        for w in range(self._n_windows(qt, ok)):
+            vals, mask = step(self.arrays, jnp.asarray(qt), jnp.asarray(ql),
+                              w * MAX_CAND_ROWS)
+            vals, mask = np.asarray(vals), np.asarray(mask)
+            for i in range(len(queries)):
+                if ok[i]:
+                    hits[i].append(vals[i][mask[i]])
+        empty = np.zeros(0, np.int64)
+        return [np.unique(np.concatenate(h)).astype(np.int64) if (o and h) else empty
+                for h, o in zip(hits, ok)]
+
+    # -- public batched entry points ------------------------------------
+    def conjunctive(self, queries: list[list[str]]) -> list[np.ndarray]:
+        """Batched AND: sorted doc ids per query, exact for any list length."""
+        return self._sweep(AND, queries)
+
+    def phrase(self, queries: list[list[str]]) -> list[np.ndarray]:
+        """Batched phrase: sorted start positions per query (positional
+        index).  Use ``positions_to_docs`` on the host index for (doc, off)."""
+        return self._sweep(PHRASE, queries)
+
+    def topk(self, queries: list[list[str]], k: int = 10) -> list[np.ndarray]:
+        """Batched ranked AND: first k matches under the idf-proxy weight
+        (matches the host ``ranked_and`` order).  Ranking runs on device;
+        the window sweep stops as soon as every query has k hits."""
+        qt, ql, ok = self.encode(queries, sort_by_length=True)
+        step = self._step(AND, qt.shape[1], topk=int(k))
+        got: list[list[np.ndarray]] = [[] for _ in queries]
+        counts = np.zeros(len(queries), np.int64)
+        for w in range(self._n_windows(qt, ok)):
+            vals, scores, valid = step(self.arrays, jnp.asarray(qt), jnp.asarray(ql),
+                                       w * MAX_CAND_ROWS)
+            vals, valid = np.asarray(vals), np.asarray(valid)
+            for i in range(len(queries)):
+                if ok[i]:
+                    got[i].append(vals[i][valid[i]])
+            counts[ok] += valid[ok].sum(axis=1)
+            if (counts >= k)[ok].all():
+                break
+        empty = np.zeros(0, np.int64)
+        return [np.concatenate(g)[:k].astype(np.int64) if (o and g) else empty
+                for g, o in zip(got, ok)]

@@ -1,12 +1,18 @@
 """Document-partitioned anchored index (§Perf H5 iter 2 — the production
 layout for >10^9-posting deployments, DESIGN.md §4).
 
-Each shard owns the postings of one *document range*, re-based to local doc
-ids, with its own anchored Re-Pair arrays.  Per-shard arrays are padded to a
-common size and stacked with a leading shard dim; ``shard_map`` runs every
-probe entirely shard-local (queries replicated, zero collectives inside),
-and results come back as (shards, batch, cand) with global doc ids — the
-classic broadcast-query / local-search / merge-results search topology.
+Each shard owns the postings of one *document range* (or, for positional
+phrase serving, one *position range* cut at document boundaries), re-based
+to local ids, with its own anchored Re-Pair arrays.  Per-shard arrays are
+padded to a common size and stacked with a leading shard dim; ``shard_map``
+runs every probe entirely shard-local (queries replicated, zero collectives
+inside), and results come back as (shards, batch, cand) with global ids —
+the classic broadcast-query / local-search / merge-results search topology.
+
+Both query kinds of the batched engine run under this layout: conjunctive
+AND (mode="and") and offset-shifted phrase probes (mode="phrase"); the
+``row_start`` argument is the same candidate-window cursor as in
+``engine.candidates_for``, so long per-shard lists are swept exactly.
 """
 
 from __future__ import annotations
@@ -18,8 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..core.anchors import AnchoredIndex, build_anchored, member_batch
-from .engine import MAX_CAND_ROWS, candidates_for
+from ..core.anchors import AnchoredIndex, build_anchored
+from ..sharding.compat import shard_map
+from .engine import MAX_CAND_ROWS, _probe_terms, candidates_for
 
 
 @dataclass
@@ -31,8 +38,14 @@ class PartitionedAnchoredIndex:
 
     @classmethod
     def build(cls, lists: list[np.ndarray], n_docs: int, n_shards: int,
-              **kw) -> "PartitionedAnchoredIndex":
-        bounds = np.linspace(0, n_docs, n_shards + 1).astype(np.int64)
+              bounds: np.ndarray | None = None, **kw) -> "PartitionedAnchoredIndex":
+        """``bounds`` overrides the equal-width split — pass document-start
+        positions for a positional index so phrases never span shards."""
+        if bounds is None:
+            bounds = np.linspace(0, n_docs, n_shards + 1).astype(np.int64)
+        else:
+            bounds = np.asarray(bounds, dtype=np.int64)
+            assert len(bounds) == n_shards + 1
         shards: list[AnchoredIndex] = []
         for s in range(n_shards):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
@@ -70,30 +83,26 @@ class PartitionedAnchoredIndex:
 
 
 def _local_serve(local: dict, query_terms: jax.Array, query_lens: jax.Array,
-                 max_terms: int):
-    """Shard-local AND queries (same logic as engine.make_uihrdc_serve_step)."""
+                 max_terms: int, mode: str = "and",
+                 row_start: jax.Array | int = 0):
+    """Shard-local batched queries (same probe loop as engine.make_serve_step,
+    candidates re-based to the shard's id space)."""
     idx = AnchoredIndex(
         anchors=local["anchors"], c_offsets=local["c_offsets"],
         expand=local["expand"], expand_valid=local["expand_valid"],
         lengths=local["lengths"], expand_len=local["expand"].shape[-1])
-    b = query_terms.shape[0]
-    cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0])
-    nc = cand_vals.shape[1]
-    match = cand_valid
-    for t in range(1, max_terms):
-        term = query_terms[:, t]
-        active = (t < query_lens)[:, None]
-        flat_ids = jnp.repeat(term, nc)
-        flat_vals = (cand_vals - 1).reshape(-1)
-        hit = member_batch(idx, flat_ids, flat_vals).reshape(b, nc)
-        match = match & jnp.where(active, hit, True)
-    # back to global doc ids
+    cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0], row_start)
+    match = _probe_terms(idx, query_terms, query_lens, cand_vals, cand_valid,
+                         max_terms, phrase=(mode == "phrase"))
+    # back to global ids
     return cand_vals - 1 + local["doc_base"][0], match
 
 
-def make_partitioned_serve_step(max_terms: int, mesh, shard_axis: str = "data"):
-    """Returns serve(arrays, query_terms, query_lens) -> (vals, mask), each
-    (n_shards, B, C); every probe is shard-local under shard_map."""
+def make_partitioned_serve_step(max_terms: int, mesh, shard_axis: str = "data",
+                                mode: str = "and"):
+    """Returns serve(arrays, query_terms, query_lens, row_start=0) ->
+    (vals, mask), each (n_shards, B, C); every probe is shard-local under
+    shard_map.  ``mode`` selects AND or offset-shifted phrase probes."""
 
     in_specs = (
         {k: P(shard_axis, *([None] * (v - 1))) for k, v in
@@ -101,16 +110,38 @@ def make_partitioned_serve_step(max_terms: int, mesh, shard_axis: str = "data"):
           "lengths": 2, "doc_base": 1}.items()},
         P(),  # queries replicated
         P(),
+        P(),  # window cursor replicated
     )
     out_specs = (P(shard_axis, None, None), P(shard_axis, None, None))
 
-    def local_fn(arrays, qt, ql):
+    def local_fn(arrays, qt, ql, row_start):
         local = {k: v[0] for k, v in arrays.items() if k != "doc_base"}
         local["doc_base"] = arrays["doc_base"]
-        vals, mask = _local_serve(local, qt, ql, max_terms)
+        vals, mask = _local_serve(local, qt, ql, max_terms, mode=mode,
+                                  row_start=row_start)
         return vals[None], mask[None]
 
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    mapped = shard_map(local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+    def serve(arrays, qt, ql, row_start=0):
+        return mapped(arrays, qt, ql, jnp.asarray(row_start, jnp.int32))
+
+    return serve
+
+
+def serve_partitioned_windowed(pidx: PartitionedAnchoredIndex, serve, qt, ql) -> list[np.ndarray]:
+    """Sweep candidate windows across all shards and merge: exact results
+    for per-shard lists of any length (concatenating per-shard hits)."""
+    c_off = np.asarray(pidx.arrays["c_offsets"])  # (S, n_terms + 1)
+    first = np.asarray(qt)[:, 0]
+    rows = (c_off[:, first + 1] - c_off[:, first]).max()
+    hits: list[list[np.ndarray]] = [[] for _ in range(len(first))]
+    for w in range(max(1, -(-int(rows) // MAX_CAND_ROWS))):
+        vals, mask = serve(pidx.arrays, qt, ql, w * MAX_CAND_ROWS)
+        vals, mask = np.asarray(vals), np.asarray(mask)
+        for qi in range(vals.shape[1]):
+            hits[qi].append(vals[:, qi][mask[:, qi]])
+    return [np.unique(np.concatenate(h)) for h in hits]
 
 
 def merge_results(vals: np.ndarray, mask: np.ndarray) -> list[np.ndarray]:

@@ -1,0 +1,46 @@
+"""Version-compat shims over the jax sharding API surface.
+
+The repo targets the jax that ships in the container; three symbols moved
+across jax releases and are papered over here so every call site (src,
+tests, the test_distributed subprocess script) imports from one place:
+
+* ``AxisType`` — ``jax.sharding.AxisType`` does not exist before ~0.5;
+  older ``make_mesh`` has no ``axis_types`` kwarg either, so a stand-in
+  enum is enough for call-site compatibility.
+* ``make_mesh`` — drops the ``axis_types`` kwarg when the installed jax
+  does not accept it.
+* ``shard_map`` — ``jax.shard_map`` on new jax, the experimental module
+  on old jax.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax
+
+
+class _AxisTypeShim(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeShim)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates jax versions without axis_types."""
+    kw = {} if devices is None else {"devices": devices}
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types, **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.6 spelling
+    from jax.experimental.shard_map import shard_map  # noqa: F401

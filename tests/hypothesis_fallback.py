@@ -1,0 +1,82 @@
+"""Deterministic stand-in for ``hypothesis`` in offline environments.
+
+The property tests (codecs / intersect / lz / repair) only use a small
+slice of the hypothesis API: ``st.just`` / ``st.integers`` / ``st.lists`` /
+``st.one_of`` / ``.map``, plus the ``@settings`` + ``@given`` decorators.
+When the real package is installed the test modules import it directly;
+when it is missing they fall back to this module, which replays
+``max_examples`` pseudo-random draws from a seed derived from the test name
+— deterministic across runs, so failures are reproducible.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def just(value) -> Strategy:
+        return Strategy(lambda rng: value)
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**30) -> Strategy:
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 20) -> Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return Strategy(draw)
+
+    @staticmethod
+    def one_of(*options: Strategy) -> Strategy:
+        return Strategy(lambda rng: options[int(rng.integers(len(options)))].draw(rng))
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Run the test once per example with kwargs drawn deterministically."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(getattr(wrapper, "_max_examples", 20)):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn kwargs from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies])
+        return wrapper
+
+    return deco

@@ -3,8 +3,11 @@ over adversarial gap distributions (runs, huge gaps, singletons)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline fallback: deterministic examples
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.codecs import CODEC_REGISTRY
 from repro.core.dgaps import from_dgaps, to_dgaps, validate_posting_list

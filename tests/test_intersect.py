@@ -1,8 +1,11 @@
 """Intersection algorithms vs set semantics (paper §2.1)."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline fallback: deterministic examples
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.intersect import (
     intersect_bys,

@@ -5,8 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.anchor_intersect.ops import anchor_probe
-from repro.kernels.anchor_intersect.ref import anchor_probe_ref
+from repro.kernels.anchor_intersect.ops import (
+    anchor_probe,
+    anchor_probe_sliced,
+    member_batch_tpu,
+)
+from repro.kernels.anchor_intersect.ref import anchor_probe_ref, anchor_probe_sliced_ref
 from repro.kernels.cin_interaction.ops import cin_layer
 from repro.kernels.cin_interaction.ref import cin_layer_ref
 from repro.kernels.dgap_decode.ops import dgap_decode
@@ -35,6 +39,46 @@ def test_anchor_probe(nq, na):
     ridx, rfound = anchor_probe_ref(queries, anchors)
     assert jnp.array_equal(idx, ridx)
     assert jnp.array_equal(found, rfound.astype(jnp.int32))
+
+
+@pytest.mark.parametrize("nq,na,nl", [(7, 100, 3), (300, 5000, 12), (1024, 2048, 40)])
+def test_anchor_probe_sliced(nq, na, nl):
+    """Per-list-sliced lower bound (the serve step's batched probe)."""
+    # anchors sorted within each list slice, not globally
+    bounds = np.sort(np.concatenate([[0, na], rng.integers(0, na, nl - 1)]))
+    anchors = np.concatenate([np.sort(rng.integers(0, 10**6, hi - lo))
+                              for lo, hi in zip(bounds[:-1], bounds[1:])])
+    lists = rng.integers(0, nl, nq)
+    lo = bounds[lists].astype(np.int32)
+    hi = bounds[lists + 1].astype(np.int32)
+    queries = rng.integers(0, 10**6, nq).astype(np.int32)
+    got = anchor_probe_sliced(jnp.asarray(queries), jnp.asarray(lo), jnp.asarray(hi),
+                              jnp.asarray(anchors, jnp.int32), interpret=True)
+    ref = anchor_probe_sliced_ref(queries, lo, hi, anchors)
+    assert jnp.array_equal(got, jnp.asarray(ref))
+
+
+def test_member_batch_tpu_matches_member_batch():
+    """The probe='kernel' serving path == the vmapped binary search,
+    including empty lists (must never match) and out-of-range values."""
+    from repro.core.anchors import build_anchored, member_batch
+
+    lists = []
+    for i in range(12):
+        if i == 5:
+            lists.append(np.asarray([], dtype=np.int64))  # empty list
+        else:
+            lists.append(np.flatnonzero(
+                np.repeat(rng.random(40) < 0.4, 10)).astype(np.int64))
+    aidx = build_anchored(lists)
+    ids = rng.integers(0, len(lists), 400).astype(np.int32)
+    vals = rng.integers(0, 500, 400).astype(np.int32)
+    ref = member_batch(aidx, jnp.asarray(ids), jnp.asarray(vals))
+    got = member_batch_tpu(aidx.anchors, aidx.c_offsets, aidx.expand,
+                           aidx.expand_valid, jnp.asarray(ids), jnp.asarray(vals),
+                           interpret=True)
+    assert jnp.array_equal(got, ref)
+    assert not bool(np.asarray(got)[ids == 5].any())  # empty list never hits
 
 
 @pytest.mark.parametrize("nb,bs,v,d", [(2, 2, 10, 8), (16, 39, 1000, 10), (8, 5, 128, 130)])

@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline fallback: deterministic examples
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.dgaps import to_dgaps
 from repro.core.intersect import intersect_repair_skip, repair_intersect_multi

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.sharding.compat import AxisType, make_mesh, shard_map
 from repro.train.loop import TrainLoop, WatchdogStats
 from repro.train.optimizer import OptConfig, opt_init, opt_update, schedule
 
@@ -145,10 +146,10 @@ def test_grad_compression_shapes():
 
     from repro.train.grad_compression import psum_int8, psum_topk
 
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(37, 5)), jnp.float32)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=jax.sharding.PartitionSpec(), out_specs=jax.sharding.PartitionSpec())
     def f(x):
         return psum_int8(x, "d")
@@ -156,7 +157,7 @@ def test_grad_compression_shapes():
     got = f(x)
     assert float(jnp.max(jnp.abs(got - x))) < 2e-2  # quantization error only
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=jax.sharding.PartitionSpec(), out_specs=(jax.sharding.PartitionSpec(),) * 2)
     def g(x):
         return psum_topk(x, "d", k_frac=1.0)
