@@ -7,16 +7,18 @@ Reports space (% of collection) and µs/occurrence for word queries
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from repro.core.index import NonPositionalIndex
+from repro.core.registry import FAMILY_INVERTED, backend_names
 
 from .common import bench_collection, fmt_row, make_query_sets, time_queries
 
-TRADITIONAL = ["vbyte", "rice", "simple9", "pfordelta", "opt_pfd", "elias_fano", "ef_opt",
-               "interpolative", "vbyte_cm", "vbyte_st", "vbyte_cmb"]
-OURS = ["rice_runs", "vbyte_lzma", "vbyte_lzend", "repair", "repair_skip",
-        "repair_skip_cm", "repair_skip_st"]
+# enumerated from the registry: §2 baselines vs the paper's §3-4 methods
+TRADITIONAL = backend_names(family=FAMILY_INVERTED, group="traditional")
+OURS = backend_names(family=FAMILY_INVERTED, group="ours")
 
 
 def run(stores: list[str] | None = None, n_queries: int = 150) -> list[dict]:
@@ -37,6 +39,15 @@ def run(stores: list[str] | None = None, n_queries: int = 150) -> list[dict]:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stores", nargs="+", default=None, metavar="NAME",
+                    choices=backend_names(family=FAMILY_INVERTED),
+                    help="backends to measure (default: all registered inverted backends)")
+    args = ap.parse_args()
+    if args.stores:
+        print("# Figs. 3+4 — selected backends")
+        run(args.stores)
+        return
     print("# Fig. 3 — traditional techniques (non-positional, repetitive collection)")
     run(TRADITIONAL)
     print("# Fig. 4 — our representations")

@@ -61,8 +61,11 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
 
 
 def main() -> None:
+    from repro.core.registry import FAMILY_INVERTED, backend_names
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--store", type=str, default="repair_skip")
+    ap.add_argument("--store", type=str, default="repair_skip",
+                    choices=backend_names(family=FAMILY_INVERTED))
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)

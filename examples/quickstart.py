@@ -43,6 +43,15 @@ def main() -> None:
         doc_tokens = tokenize(col.docs[int(d[0])])
         print("  context:", " ".join(doc_tokens[int(off[0]) - 2 : int(off[0]) + 5]))
 
+    # self-indexes answer the same queries through the same API (the
+    # backend registry: word/AND/phrase against `store="rlcsa"` etc.)
+    sub = col.docs[:30]
+    si = PositionalIndex.build(sub, store="rlcsa")
+    pv = PositionalIndex.build(sub, store="repair_skip")
+    same = np.array_equal(np.sort(si.query_phrase(phrase)), np.sort(pv.query_phrase(phrase)))
+    print(f"\nself-index backend (rlcsa): {100 * si.space_fraction:.2f}% of collection, "
+          f"phrase answers match repair_skip: {same}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Print the backend registry as a table (used by scripts/smoke.sh).
+
+    PYTHONPATH=src python scripts/list_backends.py
+    PYTHONPATH=src python scripts/list_backends.py --family selfindex
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.registry import backend_specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", choices=["inverted", "selfindex"], default=None)
+    args = ap.parse_args()
+    specs = backend_specs(family=args.family)
+    print(f"{'name':16s} {'family':9s} {'group':11s} {'paper':9s} "
+          f"{'capabilities':42s} {'build kwargs':18s} description")
+    for s in specs:
+        caps = ",".join(sorted(s.capabilities)) or "-"
+        kw = ",".join(f"{k}={s.defaults.get(k, '?')}" for k in s.build_kwargs) or "-"
+        print(f"{s.name:16s} {s.family:9s} {s.group:11s} {s.paper:9s} "
+              f"{caps:42s} {kw:18s} {s.doc}")
+    print(f"\n{len(specs)} backends registered"
+          + (f" (family={args.family})" if args.family else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 # Tier-1 smoke wrapper: the ROADMAP verify command plus a headless
 # end-to-end serving check. CI-able: exits non-zero on any failure.
 #
-#   scripts/smoke.sh            # full tier-1 + example
+#   scripts/smoke.sh            # full tier-1 + example + registry check
 #   scripts/smoke.sh -k serving # extra args are passed to pytest
 set -eu
 
@@ -12,6 +12,36 @@ export PYTHONPATH
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"
+
+echo "== backend registry =="
+python scripts/list_backends.py
+
+echo "== unified engine: one backend per family, mixed query batch =="
+python - <<'EOF'
+import numpy as np
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+from repro.data.text import tokenize
+from repro.serving.engine import QueryEngine
+
+col = generate_collection(n_articles=3, versions_per_article=5,
+                          words_per_doc=60, seed=7)
+ph = tokenize(col.docs[0])[2:4]
+engines = {}
+for store in ("repair_skip", "rlcsa"):  # one inverted, one self-index
+    engines[store] = QueryEngine(
+        NonPositionalIndex.build(col.docs, store=store),
+        positional=PositionalIndex.build(col.docs, store=store))
+words = [w for w in engines["repair_skip"].index.vocab.id_to_token[:12]]
+batch = [words[1], f"{words[1]} {words[4]}", '"' + " ".join(ph) + '"']
+results = {s: e.batch(batch) for s, e in engines.items()}
+for q, a, b in zip(batch, results["repair_skip"], results["rlcsa"]):
+    assert np.array_equal(np.sort(np.asarray(a)), np.sort(np.asarray(b))), q
+    plan = engines["rlcsa"].planner.plan(q)
+    print(f"  {q!r:32s} -> {len(np.asarray(a)):3d} hits "
+          f"(rlcsa strategy: {plan.strategy})")
+print("inverted/self-index answers agree on the mixed batch")
+EOF
 
 echo "== end-to-end: examples/serve_queries.py =="
 python examples/serve_queries.py

@@ -75,9 +75,17 @@ class Codec:
 
 
 class ListStore:
-    """Whole-index list representation (built over all lists at once)."""
+    """Whole-index list representation (built over all lists at once).
+
+    Every store is a ``SearchBackend`` (see ``repro.core.registry``): it
+    declares a capability set and inherits capability-aware default
+    implementations of the intersection protocol.  The defaults decode and
+    merge; backends with ``intersect_candidates`` / ``shifted_intersect``
+    capabilities override exactly the method their capability names.
+    """
 
     name: str = "abstract"
+    capabilities: frozenset[str] = frozenset()
 
     @classmethod
     def build(cls, lists: list[np.ndarray], **kw) -> "ListStore":
@@ -94,6 +102,48 @@ class ListStore:
 
     def list_length(self, i: int) -> int:
         raise NotImplementedError
+
+    # -- the unified query protocol -------------------------------------
+    def intersect_candidates(self, i: int, cand: np.ndarray) -> np.ndarray:
+        """Members of sorted ``cand`` that occur in list ``i``.
+
+        Default: decode the list, galloping set-vs-set (§2.1).  Backends
+        with the ``intersect_candidates`` capability answer in the
+        compressed domain instead.
+        """
+        from ..intersect import intersect_svs
+
+        return intersect_svs(cand, self.get_list(i))
+
+    def intersect_multi(self, list_ids: list[int]) -> np.ndarray:
+        """AND of several lists: shortest list drives candidate generation,
+        the rest are probed via :meth:`intersect_candidates` (paper §2.1 /
+        §4.3 — the same loop for every backend, the per-list probe is what
+        the capability set changes)."""
+        if not list_ids:
+            return np.zeros(0, dtype=np.int64)
+        order = sorted(list_ids, key=self.list_length)
+        cand = self.get_list(order[0])
+        for li in order[1:]:
+            if len(cand) == 0:
+                break
+            cand = self.intersect_candidates(li, cand)
+        return cand
+
+    def intersect_shifted(self, list_ids: list[int], shifts: list[int]) -> np.ndarray:
+        """Offset-shifted intersection (phrase queries, §3): positions p
+        with ``p + shifts[i]`` in list i for all i.  Backends with the
+        ``shifted_intersect`` capability (self-indexes) answer the whole
+        pattern natively instead."""
+        order = sorted(range(len(list_ids)), key=lambda k: self.list_length(list_ids[k]))
+        k0 = order[0]
+        cand = self.get_list(list_ids[k0]) - shifts[k0]
+        for k in order[1:]:
+            if len(cand) == 0:
+                break
+            li, sh = list_ids[k], shifts[k]
+            cand = self.intersect_candidates(li, cand + sh) - sh
+        return cand
 
     @property
     def size_in_bits(self) -> int:

@@ -1,9 +1,9 @@
-"""Inverted indexes over document collections (paper §3, §5).
+"""Inverted indexes over document collections (paper §3, §5, §6).
 
 * :class:`NonPositionalIndex` — per word, the sorted doc-ids containing it.
   Word parsing mirrors the paper's §5.1.3 setup: case folding, no stemming,
-  top-20 stopwords removed.  Conjunctive (AND) queries via the store's best
-  intersection path.
+  top-20 stopwords removed.  Conjunctive (AND) queries via the backend's
+  capability-selected intersection path.
 
 * :class:`PositionalIndex` — per token (words *and* separators, §5.2: the
   text is indexed as-is), the increasing global word offsets in the
@@ -12,110 +12,85 @@
   shifted intersection; positions translate to (doc, offset) through the
   stored array of document start positions.
 
-Both are parameterized by a list store:  ``store="repair_skip"`` etc. — see
-:data:`STORE_BUILDERS`.
+Both are parameterized by a **registered backend** (``store="repair_skip"``,
+``store="rlcsa"``, … — see :mod:`repro.core.registry`).  Inverted-family
+backends build from the posting lists; self-index-family backends build
+from the token-id stream of the same collection and answer the same
+queries (word / AND / phrase) through the same ``SearchBackend`` protocol.
+All query dispatch goes through declared capabilities — there is no
+store-type switching here.
 """
 
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass
-from typing import Callable
 
 import numpy as np
 
 from ..data.text import STOPWORDS, Vocabulary, is_word_token, tokenize
-from .codecs import (
-    EliasFano,
-    Interpolative,
-    OptPFD,
-    PartitionedEF,
-    PerListStore,
-    PForDelta,
-    Rice,
-    RiceRuns,
-    Simple9,
-    VByte,
-    VbyteLZMA,
+from .registry import (
+    FAMILY_INVERTED,
+    FAMILY_SELFINDEX,
+    BuildSource,
+    backend_names,
+    build_backend,
+    get_backend_spec,
 )
-from .codecs.base import ListStore
-from .intersect import intersect_multi, repair_intersect_multi
-from .lz_store import VbyteLZendStore
-from .repair import RePairStore
-from .sampled_store import SampledVByteStore
-
-STORE_BUILDERS: dict[str, Callable[[list[np.ndarray]], ListStore]] = {
-    "vbyte": lambda ls: PerListStore.build(ls, codec=VByte()),
-    "rice": lambda ls: PerListStore.build(ls, codec=Rice()),
-    "rice_runs": lambda ls: PerListStore.build(ls, codec=RiceRuns()),
-    "simple9": lambda ls: PerListStore.build(ls, codec=Simple9()),
-    "pfordelta": lambda ls: PerListStore.build(ls, codec=PForDelta()),
-    "opt_pfd": lambda ls: PerListStore.build(ls, codec=OptPFD()),
-    "elias_fano": lambda ls: PerListStore.build(ls, codec=EliasFano()),
-    "ef_opt": lambda ls: PerListStore.build(ls, codec=PartitionedEF()),
-    "interpolative": lambda ls: PerListStore.build(ls, codec=Interpolative()),
-    "vbyte_lzma": lambda ls: PerListStore.build(ls, codec=VbyteLZMA()),
-    "vbyte_cm": lambda ls, k=32: SampledVByteStore.build(ls, kind="cm", param=k),
-    "vbyte_st": lambda ls, B=16: SampledVByteStore.build(ls, kind="st", param=B),
-    "vbyte_cmb": lambda ls, k=32: SampledVByteStore.build(ls, kind="cm", param=k, bitmaps=True),
-    "vbyte_stb": lambda ls, B=16: SampledVByteStore.build(ls, kind="st", param=B, bitmaps=True),
-    "repair": lambda ls: RePairStore.build(ls, variant="plain"),
-    "repair_skip": lambda ls: RePairStore.build(ls, variant="skip"),
-    "repair_skip_cm": lambda ls, k=64: RePairStore.build(ls, variant="skip", sampling=("cm", k)),
-    "repair_skip_st": lambda ls, B=1024: RePairStore.build(ls, variant="skip", sampling=("st", B)),
-    "vbyte_lzend": lambda ls: VbyteLZendStore.build(ls),
-}
 
 
-def _store_intersect(store: ListStore, list_ids: list[int]) -> np.ndarray:
-    if isinstance(store, RePairStore):
-        return repair_intersect_multi(store, list_ids)
-    if isinstance(store, SampledVByteStore):
-        return store.intersect_multi(list_ids)
-    lists = [store.get_list(i) for i in list_ids]
-    return intersect_multi(lists)
+class _LegacyStoreBuilders(Mapping):
+    """Backwards-compatible view of the registry as the old
+    ``STORE_BUILDERS`` dict: ``STORE_BUILDERS[name](lists, **kw)``.
+
+    Unknown names raise ``ValueError`` (listing registered backends) instead
+    of the old bare ``KeyError``; stray kwargs raise ``ValueError`` instead
+    of a lambda ``TypeError``.
+    """
+
+    def __getitem__(self, name: str):
+        spec = get_backend_spec(name)  # unknown name -> ValueError, eagerly
+        if spec.family != FAMILY_INVERTED:
+            raise ValueError(
+                f"backend {name!r} is a {spec.family} backend; the legacy "
+                f"STORE_BUILDERS view covers inverted stores only — build "
+                f"it through NonPositionalIndex.build / PositionalIndex.build")
+        return lambda lists, **kw: build_backend(name, lists, **kw)
+
+    def __iter__(self):
+        return iter(backend_names(family=FAMILY_INVERTED))
+
+    def __len__(self) -> int:
+        return len(backend_names(family=FAMILY_INVERTED))
+
+    def __contains__(self, name) -> bool:
+        return name in backend_names(family=FAMILY_INVERTED)
 
 
-def _store_intersect_shifted(store: ListStore, list_ids: list[int], shifts: list[int]) -> np.ndarray:
-    """Intersect lists after subtracting ``shifts[i]`` from list i (phrase
-    queries §3): returns positions p with p + shifts[i] in list i for all i."""
-    order = sorted(range(len(list_ids)), key=lambda k: store.list_length(list_ids[k]))
-    k0 = order[0]
-    cand = store.get_list(list_ids[k0]) - shifts[k0]
-    for k in order[1:]:
-        if len(cand) == 0:
-            break
-        li, sh = list_ids[k], shifts[k]
-        if isinstance(store, RePairStore) and store.variant == "skip":
-            from .intersect import intersect_repair_skip
-
-            got = intersect_repair_skip(store, li, cand + sh)
-            cand = got - sh
-        elif isinstance(store, SampledVByteStore):
-            got = store.intersect_candidates(li, cand + sh)
-            cand = got - sh
-        else:
-            from .intersect import intersect_svs
-
-            got = intersect_svs(cand + sh, store.get_list(li))
-            cand = got - sh
-    return cand
+STORE_BUILDERS = _LegacyStoreBuilders()
 
 
 # ----------------------------------------------------------------------
 @dataclass
 class NonPositionalIndex:
     vocab: Vocabulary
-    store: ListStore
+    store: object  # any SearchBackend
     n_docs: int
     collection_bytes: int
     store_name: str
+    doc_starts: np.ndarray | None = None  # only set for self-index backends
 
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", case_fold: bool = True,
               drop_stopwords: bool = True, **store_kw) -> "NonPositionalIndex":
+        spec = get_backend_spec(store)  # unknown name -> ValueError up front
         vocab = Vocabulary()
         postings: dict[int, list[int]] = {}
+        need_stream = spec.family == FAMILY_SELFINDEX
+        stream: list[int] = []
+        doc_starts = np.zeros(len(docs), dtype=np.int64)
         for d, doc in enumerate(docs):
+            doc_starts[d] = len(stream)
             seen: set[int] = set()
             for tok in tokenize(doc):
                 if not is_word_token(tok):
@@ -124,16 +99,32 @@ class NonPositionalIndex:
                 if drop_stopwords and w in STOPWORDS:
                     continue
                 wid = vocab.add(w)
+                if need_stream:
+                    stream.append(wid)
                 if wid not in seen:
                     seen.add(wid)
                     postings.setdefault(wid, []).append(d)
         lists = [np.asarray(postings.get(w, []), dtype=np.int64) for w in range(len(vocab))]
-        built = STORE_BUILDERS[store](lists, **store_kw) if store_kw else STORE_BUILDERS[store](lists)
+        source = BuildSource(
+            lists=lists, n_docs=len(docs),
+            stream=np.asarray(stream, dtype=np.int64) if need_stream else None,
+            doc_starts=doc_starts if need_stream else None,
+            doc_lists=True)
+        built = build_backend(store, source, **store_kw)
         return cls(vocab=vocab, store=built, n_docs=len(docs),
-                   collection_bytes=sum(len(d) for d in docs), store_name=store)
+                   collection_bytes=sum(len(d) for d in docs), store_name=store,
+                   doc_starts=doc_starts if need_stream else None)
 
     def word_id(self, w: str) -> int | None:
         return self.vocab.get(w.lower())
+
+    # uniform term lookup for the planner/serving layers
+    lookup = word_id
+
+    @property
+    def universe_size(self) -> int:
+        """The id universe postings live in (idf denominator)."""
+        return self.n_docs
 
     def query_word(self, w: str) -> np.ndarray:
         wid = self.word_id(w)
@@ -148,7 +139,7 @@ class NonPositionalIndex:
             if wid is None:
                 return np.zeros(0, dtype=np.int64)
             ids.append(wid)
-        return _store_intersect(self.store, ids)
+        return self.store.intersect_multi(ids)
 
     @property
     def size_in_bits(self) -> int:
@@ -167,7 +158,7 @@ DOC_SEP = "\x00"
 @dataclass
 class PositionalIndex:
     vocab: Vocabulary
-    store: ListStore
+    store: object  # any SearchBackend
     doc_starts: np.ndarray  # word offset where each document begins in D
     n_tokens: int
     collection_bytes: int
@@ -177,6 +168,7 @@ class PositionalIndex:
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", keep_text: bool = False,
               **store_kw) -> "PositionalIndex":
+        spec = get_backend_spec(store)  # unknown name -> ValueError up front
         vocab = Vocabulary()
         sep_id = vocab.add(DOC_SEP)
         stream: list[int] = []
@@ -192,13 +184,25 @@ class PositionalIndex:
         # the separator list is not part of the index (never queried)
         lists = [np.asarray(postings[w], dtype=np.int64) if w != sep_id else np.zeros(0, dtype=np.int64)
                  for w in range(len(vocab))]
-        built = STORE_BUILDERS[store](lists, **store_kw) if store_kw else STORE_BUILDERS[store](lists)
+        source = BuildSource(
+            lists=lists, n_docs=len(docs),
+            stream=tok if spec.family == FAMILY_SELFINDEX else None,
+            doc_starts=doc_starts, sep_id=sep_id)
+        built = build_backend(store, source, **store_kw)
         return cls(vocab=vocab, store=built, doc_starts=doc_starts, n_tokens=len(tok),
                    collection_bytes=sum(len(d) for d in docs), store_name=store,
                    token_stream=tok if keep_text else None)
 
     def token_id(self, t: str) -> int | None:
         return self.vocab.get(t)
+
+    # uniform term lookup for the planner/serving layers
+    lookup = token_id
+
+    @property
+    def universe_size(self) -> int:
+        """The id universe postings live in (idf denominator)."""
+        return self.n_tokens
 
     def query_word(self, w: str) -> np.ndarray:
         tid = self.token_id(w)
@@ -216,7 +220,7 @@ class PositionalIndex:
             ids.append(tid)
         if len(ids) == 1:
             return self.store.get_list(ids[0])
-        return _store_intersect_shifted(self.store, ids, list(range(len(ids))))
+        return self.store.intersect_shifted(ids, list(range(len(ids))))
 
     def positions_to_docs(self, positions: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Translate global offsets to (doc id, in-doc word offset) (§3)."""

@@ -1,0 +1,241 @@
+"""Capability-based backend registry: one store namespace, one query protocol.
+
+The paper's central comparison puts inverted-index stores (§5) and
+compressed self-indexes (§6 / Appendix A) side by side as interchangeable
+search backends.  This module is the API that makes them interchangeable in
+code:
+
+* :class:`SearchBackend` — the protocol every backend speaks: posting-list
+  access (``get_list`` / ``list_length``) plus candidate-driven intersection
+  (``intersect_candidates`` / ``intersect_multi`` / ``intersect_shifted``)
+  and exact bit-level size accounting.  Concrete behavior is selected by
+  **declared capabilities**, never by concrete types:
+
+  ========================  ====================================================
+  capability                meaning
+  ========================  ====================================================
+  ``seek``                  sampled seek into a compressed list (§2.2 CM/ST,
+                            §4.2 Re-Pair sampling) — candidates start
+                            mid-stream instead of at the list head
+  ``intersect_candidates``  compressed-domain candidate intersection without
+                            full decode (Re-Pair skipping §4.1/§4.3, sampled
+                            Vbyte chunks §2.2)
+  ``shifted_intersect``     native offset-shifted (phrase) search — the
+                            backend answers a whole phrase pattern in one
+                            ``locate`` instead of per-term probes (self-
+                            indexes, Appendix A)
+  ``device_resident``       the backend's own arrays anchor directly onto the
+                            device (``AnchoredIndex.from_store``) — no
+                            decode-and-re-anchor pass is needed
+  ``extract``               snippet extraction: the backend can reproduce the
+                            underlying token stream (self-index property)
+  ========================  ====================================================
+
+* :func:`register_backend` — decorator placing a builder in the registry
+  with per-backend metadata (family, benchmark group, capability set,
+  accepted build kwargs).  Unknown names and unknown kwargs raise
+  ``ValueError`` naming the alternatives; ``**store_kw`` forwards uniformly.
+
+* :class:`BuildSource` — everything a builder may consume, derived once from
+  the document collection by the index build: per-term posting lists for the
+  inverted family, the token-id stream + document boundaries for the
+  self-index family.
+"""
+
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+# ----------------------------------------------------------------------
+# capability flags
+# ----------------------------------------------------------------------
+CAP_SEEK = "seek"
+CAP_INTERSECT_CANDIDATES = "intersect_candidates"
+CAP_SHIFTED_INTERSECT = "shifted_intersect"
+CAP_DEVICE_RESIDENT = "device_resident"
+CAP_EXTRACT = "extract"
+
+ALL_CAPABILITIES = frozenset({
+    CAP_SEEK, CAP_INTERSECT_CANDIDATES, CAP_SHIFTED_INTERSECT,
+    CAP_DEVICE_RESIDENT, CAP_EXTRACT,
+})
+
+# backend families
+FAMILY_INVERTED = "inverted"
+FAMILY_SELFINDEX = "selfindex"
+
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """What the indexes, planner, and serving layers require of a backend.
+
+    ``repro.core.codecs.base.ListStore`` provides capability-aware default
+    implementations of the intersection methods, so a backend only overrides
+    what its declared capabilities improve on.
+    """
+
+    capabilities: frozenset[str]
+
+    @property
+    def n_lists(self) -> int: ...
+
+    def get_list(self, i: int) -> np.ndarray: ...
+
+    def list_length(self, i: int) -> int: ...
+
+    def intersect_candidates(self, i: int, cand: np.ndarray) -> np.ndarray: ...
+
+    def intersect_multi(self, list_ids: list[int]) -> np.ndarray: ...
+
+    def intersect_shifted(self, list_ids: list[int], shifts: list[int]) -> np.ndarray: ...
+
+    @property
+    def size_in_bits(self) -> int: ...
+
+
+# ----------------------------------------------------------------------
+# build-time input
+# ----------------------------------------------------------------------
+@dataclass
+class BuildSource:
+    """Input bundle handed to backend builders by the index build.
+
+    The inverted family consumes ``lists``; the self-index family consumes
+    ``stream`` (+ ``doc_starts`` when doc-granularity answers are needed).
+    """
+
+    lists: list[np.ndarray]
+    stream: np.ndarray | None = None  # token-id sequence over the collection
+    doc_starts: np.ndarray | None = None  # stream offset where each doc begins
+    n_docs: int = 0
+    sep_id: int | None = None  # document-separator token id in `stream`
+    doc_lists: bool = False  # True: answers are doc ids, not stream positions
+
+    @classmethod
+    def from_lists(cls, lists: Iterable[np.ndarray]) -> "BuildSource":
+        return cls(lists=[np.asarray(l, dtype=np.int64) for l in lists])
+
+
+# ----------------------------------------------------------------------
+# the registry
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class BackendSpec:
+    """Registry metadata for one backend."""
+
+    name: str
+    family: str  # FAMILY_INVERTED | FAMILY_SELFINDEX
+    builder: Callable[..., Any]  # builder(source: BuildSource, **kw) -> backend
+    capabilities: frozenset[str]
+    group: str  # benchmark grouping: "traditional" | "ours" | "selfindex"
+    build_kwargs: tuple[str, ...]  # kwarg names the builder accepts
+    defaults: dict[str, Any] = field(default_factory=dict)
+    doc: str = ""
+    paper: str = ""  # paper section the method comes from
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+_builtin_loaded = False
+
+
+def _ensure_builtin() -> None:
+    """Import the module that registers the built-in backends (lazily, so
+    `registry` itself stays import-cycle free)."""
+    global _builtin_loaded
+    if not _builtin_loaded:
+        from . import backends  # noqa: F401  (registers on import)
+
+        _builtin_loaded = True
+
+
+def register_backend(name: str, *, family: str, capabilities: Iterable[str] = (),
+                     group: str = "ours", doc: str = "", paper: str = ""):
+    """Decorator: place ``builder(source, **kw)`` in the registry.
+
+    The builder's keyword parameters (with their defaults) become the
+    backend's declared build kwargs; anything else passed at build time is a
+    ``ValueError``.
+    """
+    caps = frozenset(capabilities)
+    unknown = caps - ALL_CAPABILITIES
+    if unknown:
+        raise ValueError(f"unknown capabilities {sorted(unknown)}; "
+                         f"valid: {sorted(ALL_CAPABILITIES)}")
+
+    def deco(builder):
+        params = inspect.signature(builder).parameters
+        kw_names = tuple(p.name for p in params.values()
+                         if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+                         and p.name != "source")
+        defaults = {p.name: p.default for p in params.values()
+                    if p.name in kw_names and p.default is not p.empty}
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        doc_lines = (doc or builder.__doc__ or "").strip().splitlines()
+        _REGISTRY[name] = BackendSpec(
+            name=name, family=family, builder=builder, capabilities=caps,
+            group=group, build_kwargs=kw_names, defaults=defaults,
+            doc=doc_lines[0] if doc_lines else "", paper=paper)
+        return builder
+
+    return deco
+
+
+def backend_names(family: str | None = None, group: str | None = None) -> list[str]:
+    """Registered backend names, in registration order, optionally filtered."""
+    _ensure_builtin()
+    return [n for n, s in _REGISTRY.items()
+            if (family is None or s.family == family)
+            and (group is None or s.group == group)]
+
+
+def backend_specs(family: str | None = None) -> list[BackendSpec]:
+    _ensure_builtin()
+    return [s for s in _REGISTRY.values() if family is None or s.family == family]
+
+
+def get_backend_spec(name: str) -> BackendSpec:
+    """Spec for ``name``; unknown names raise ValueError listing the registry."""
+    _ensure_builtin()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))}")
+    return spec
+
+
+def build_backend(name: str, source: "BuildSource | list[np.ndarray]", **store_kw):
+    """Build backend ``name`` from ``source`` (a :class:`BuildSource`, or a
+    plain list of posting arrays for the inverted family).
+
+    Raises ``ValueError`` for unknown backend names (listing registered
+    ones) and for build kwargs the backend does not accept (listing the
+    accepted ones) — the registry-level replacement for the old
+    ``STORE_BUILDERS[...]`` ``KeyError`` / lambda ``TypeError`` crashes.
+    """
+    spec = get_backend_spec(name)
+    if not isinstance(source, BuildSource):
+        source = BuildSource.from_lists(source)
+    bad = set(store_kw) - set(spec.build_kwargs)
+    if bad:
+        accepted = ", ".join(spec.build_kwargs) or "(none)"
+        raise ValueError(
+            f"backend {name!r} got unexpected build kwargs {sorted(bad)}; "
+            f"accepted: {accepted}")
+    if spec.family == FAMILY_SELFINDEX and source.stream is None:
+        raise ValueError(
+            f"backend {name!r} is a self-index: it builds from the token "
+            f"stream of a document collection, not from raw posting lists "
+            f"(build it through NonPositionalIndex.build / "
+            f"PositionalIndex.build)")
+    return spec.builder(source, **store_kw)
+
+
+def capabilities_of(backend) -> frozenset[str]:
+    """The backend's declared capability set (empty when undeclared)."""
+    return getattr(backend, "capabilities", frozenset())

@@ -24,6 +24,7 @@ import numpy as np
 
 from .codecs.base import ListStore, register_store
 from .dgaps import to_dgaps
+from .registry import CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK
 
 DEAD = np.int64(-(1 << 62))
 
@@ -277,6 +278,15 @@ class RePairStore(ListStore):
             self._build_samples()
         # operation counter for the Theorem-1 property test
         self.op_counter = 0
+        # declared capabilities depend on the variant: the (R_B, R_S) arrays
+        # anchor directly onto the device either way; skipping search and
+        # sampled seeks are per-variant
+        caps = {CAP_DEVICE_RESIDENT}
+        if variant == "skip":
+            caps.add(CAP_INTERSECT_CANDIDATES)
+        if sampling is not None:
+            caps.add(CAP_SEEK)
+        self.capabilities = frozenset(caps)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -387,6 +397,18 @@ class RePairStore(ListStore):
 
     def list_length(self, i: int) -> int:
         return int(self.lengths[i])
+
+    # ------------------------------------------------------------------
+    # the unified query protocol
+    # ------------------------------------------------------------------
+    def intersect_candidates(self, i: int, cand: np.ndarray) -> np.ndarray:
+        """Skip variant: compressed-domain candidate intersection via phrase
+        sums (§4.3); plain variant: the decode-and-merge default."""
+        if self.variant == "skip":
+            from .intersect import intersect_repair_skip
+
+            return intersect_repair_skip(self, i, cand)
+        return super().intersect_candidates(i, cand)
 
     # ------------------------------------------------------------------
     # skip search (§4.1): is value x in list i?

@@ -16,10 +16,13 @@ import numpy as np
 from .codecs.base import ListStore, register_store
 from .codecs.vbyte import vbyte_decode_array, vbyte_encode_array
 from .dgaps import to_dgaps
+from .registry import CAP_INTERSECT_CANDIDATES, CAP_SEEK
 
 
 @register_store("vbyte_sampled")
 class SampledVByteStore(ListStore):
+    capabilities = frozenset({CAP_SEEK, CAP_INTERSECT_CANDIDATES})
+
     def __init__(self, entries: list[dict], universe: int, kind: str, param: int, bitmaps: bool):
         self.entries = entries
         self.universe = universe
@@ -122,14 +125,8 @@ class SampledVByteStore(ListStore):
                 out.append(x)
         return np.asarray(out, dtype=np.int64)
 
-    def intersect_multi(self, list_ids: list[int]) -> np.ndarray:
-        order = sorted(list_ids, key=self.list_length)
-        cand = self.get_list(order[0])
-        for li in order[1:]:
-            if len(cand) == 0:
-                break
-            cand = self.intersect_candidates(li, cand)
-        return cand
+    # intersect_multi: inherited — the ListStore default is exactly this
+    # store's loop (decode shortest, probe the rest via sampled chunks).
 
     # ------------------------------------------------------------------
     @property

@@ -15,6 +15,7 @@ import time
 import numpy as np
 
 from ..core.index import NonPositionalIndex, PositionalIndex
+from ..core.registry import FAMILY_SELFINDEX, backend_names, get_backend_spec
 from ..data import generate_collection
 from ..data.queries import sample_traffic
 from ..serving.engine import BatchedServer, QueryEngine
@@ -26,13 +27,18 @@ def main() -> None:
     ap.add_argument("--versions", type=int, default=25)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--terms", type=int, default=2)
-    ap.add_argument("--store", type=str, default="repair_skip")
+    ap.add_argument("--store", type=str, default="repair_skip",
+                    choices=backend_names(),
+                    help="any registered backend — inverted store or self-index")
     ap.add_argument("--mode", type=str, default="and",
                     choices=["and", "phrase", "topk", "mixed"])
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    spec = get_backend_spec(args.store)
+    print(f"backend {spec.name}: family={spec.family} "
+          f"caps=[{','.join(sorted(spec.capabilities)) or '-'}]")
     col = generate_collection(n_articles=args.articles, versions_per_article=args.versions,
                               words_per_doc=200, seed=args.seed)
     t0 = time.perf_counter()
@@ -47,11 +53,14 @@ def main() -> None:
         print(f"built {args.store} positional index ({100 * pidx.space_fraction:.3f}% "
               f"of collection) in {time.perf_counter()-t0:.2f}s")
 
+    # self-indexes serve natively on the host (planner strategy "self-locate");
+    # anchoring them onto the device would decode every list through locate()
+    attach_device = spec.family != FAMILY_SELFINDEX
     engine = QueryEngine(
         idx, positional=pidx,
-        server=BatchedServer.from_index(idx, probe=args.probe),
+        server=BatchedServer.from_index(idx, probe=args.probe) if attach_device else None,
         positional_server=(BatchedServer.from_index(pidx, probe=args.probe)
-                           if pidx is not None else None))
+                           if pidx is not None and attach_device else None))
 
     rng = np.random.default_rng(args.seed)
     words = [w for w in idx.vocab.id_to_token[:300]]

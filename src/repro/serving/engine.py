@@ -37,8 +37,13 @@ import numpy as np
 
 from ..core.anchors import AnchoredIndex, build_anchored, member_batch
 from ..core.index import NonPositionalIndex, PositionalIndex
-from ..core.repair import RePairStore
-from ..core.sampled_store import SampledVByteStore
+from ..core.registry import (
+    CAP_DEVICE_RESIDENT,
+    CAP_INTERSECT_CANDIDATES,
+    CAP_SEEK,
+    CAP_SHIFTED_INTERSECT,
+    capabilities_of,
+)
 
 MAX_CAND_ROWS = 64  # candidate C-entries taken from the driving list per window
 
@@ -93,10 +98,18 @@ class QueryPlan:
 
 
 def _host_strategy(store) -> str:
-    if isinstance(store, RePairStore):
-        return "repair-skip" if store.variant == "skip" else "repair-decode"
-    if isinstance(store, SampledVByteStore):
-        return "sampled-seek"
+    """Name the host intersection path a backend's capabilities select.
+
+    Dispatch is purely capability-driven (no store types): self-indexes
+    locate whole patterns natively; ``intersect_candidates`` backends
+    intersect in the compressed domain (with or without sampled seeks);
+    everything else decodes and merges.
+    """
+    caps = capabilities_of(store)
+    if CAP_SHIFTED_INTERSECT in caps:
+        return "self-locate"
+    if CAP_INTERSECT_CANDIDATES in caps:
+        return "sampled-seek" if CAP_SEEK in caps else "compressed-skip"
     return "svs-merge"
 
 
@@ -108,6 +121,9 @@ class QueryPlanner:
     :class:`BatchedServer` is attached for that index (anchored arrays
     resident on device); single words and unknown-term queries stay on the
     host (a word query is a pure list decode — no intersection to batch).
+    Self-index backends serve through the host route: their native
+    ``locate`` answers the whole pattern at once (strategy "self-locate"),
+    so there is no per-term probe loop to batch onto the device.
     """
 
     def __init__(self, engine: "QueryEngine"):
@@ -133,9 +149,7 @@ class QueryPlanner:
 
 
 def _lookup(index, term: str):
-    if isinstance(index, PositionalIndex):
-        return index.token_id(term)
-    return index.word_id(term)
+    return index.lookup(term)
 
 
 # ----------------------------------------------------------------------
@@ -372,16 +386,17 @@ class BatchedServer:
     def from_index(cls, index: NonPositionalIndex | PositionalIndex,
                    expand_len: int = 32, probe: str = "vmap") -> "BatchedServer":
         store = index.store
-        if isinstance(store, RePairStore):
+        if CAP_DEVICE_RESIDENT in capabilities_of(store):
+            # the backend's own arrays anchor directly (no decode pass)
             aidx = AnchoredIndex.from_store(store, expand_len=expand_len)
-        else:  # re-anchor from decoded lists (any of the 19 stores)
+        else:  # re-anchor from decoded lists (any registered backend)
             lists = [store.get_list(i) for i in range(store.n_lists)]
             aidx = build_anchored(lists, expand_len=expand_len)
         arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
                   "expand": aidx.expand, "expand_valid": aidx.expand_valid,
                   "lengths": aidx.lengths}
-        n = index.n_docs if isinstance(index, NonPositionalIndex) else index.n_tokens
-        return cls(host_index=index, arrays=arrays, n_docs=float(n), probe=probe)
+        return cls(host_index=index, arrays=arrays,
+                   n_docs=float(index.universe_size), probe=probe)
 
     # -- encoding -------------------------------------------------------
     def encode(self, queries: list[list[str]],

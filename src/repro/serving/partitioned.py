@@ -81,6 +81,23 @@ class PartitionedAnchoredIndex:
         }
         return cls(arrays=arrays, doc_bounds=bounds, n_shards=n_shards, expand_len=el)
 
+    @classmethod
+    def from_index(cls, index, n_shards: int, **kw) -> "PartitionedAnchoredIndex":
+        """Shard a built index whatever backend it uses: posting lists are
+        pulled through the ``SearchBackend`` protocol (``get_list``), so the
+        sharded layout works for inverted stores and self-index adapters
+        alike.  Positional indexes (``n_tokens`` universe) are cut at
+        document boundaries so phrases never span shards."""
+        store = index.store
+        lists = [np.asarray(store.get_list(i)) for i in range(store.n_lists)]
+        universe = int(index.universe_size)
+        bounds = None
+        if hasattr(index, "n_tokens"):  # positional: align shard cuts to docs
+            starts = np.asarray(index.doc_starts, dtype=np.int64)
+            picks = np.linspace(0, len(starts), n_shards + 1).astype(np.int64)[1:-1]
+            bounds = np.concatenate([[0], starts[picks], [universe]])
+        return cls.build(lists, n_docs=universe, n_shards=n_shards, bounds=bounds, **kw)
+
 
 def _local_serve(local: dict, query_terms: jax.Array, query_lens: jax.Array,
                  max_terms: int, mode: str = "and",
