@@ -1,0 +1,110 @@
+"""Document-listing throughput: queries/sec for ``docs:`` traffic (word /
+AND / phrase patterns) through the planner-routed batched device path, at
+batch sizes 16/64/256, plus the *distinct-docs / occurrences* ratio — the
+quantity that makes listing on repetitive collections cheap: the device
+dedup (segment-max inside the windowed sweep) returns only the distinct
+survivors of each window, so the host touches ~ratio × occurrences values.
+
+Emits a JSON object (one entry per (mix, batch_size)) on stdout after the
+human-readable table.
+
+    PYTHONPATH=src python benchmarks/doclist_throughput.py
+    PYTHONPATH=src python benchmarks/doclist_throughput.py --store repair_skip
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.data import generate_collection
+from repro.data.queries import sample_traffic
+from repro.serving.engine import BatchedServer, QueryEngine, parse_query
+
+BATCH_SIZES = (16, 64, 256)
+MIXES = ("docs", "docs-phrase", "docs-topk")
+
+
+def _occurrences(engine: QueryEngine, q: str) -> int:
+    """Total pattern occurrences behind one docs query (host count)."""
+    pq = parse_query(q)
+    if pq.phrase:
+        return len(engine.phrase(list(pq.terms)))
+    occ = 0
+    for t in pq.terms:
+        tid = engine.positional.lookup(t) if engine.positional else None
+        occ += engine.positional.store.list_length(tid) if tid is not None else 0
+    return occ
+
+
+def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
+        seed: int = 0) -> list[dict]:
+    col = generate_collection(n_articles=10, versions_per_article=25,
+                              words_per_doc=200, seed=seed)
+    idx = NonPositionalIndex.build(col.docs, store=store)
+    pidx = PositionalIndex.build(col.docs, store=store)
+    # self-indexes serve natively on the host (strategy "self-doclist");
+    # anchoring them would decode every list through locate()
+    from repro.core.registry import FAMILY_SELFINDEX, get_backend_spec
+
+    attach = get_backend_spec(store).family != FAMILY_SELFINDEX
+    engine = QueryEngine(
+        idx, positional=pidx,
+        server=BatchedServer.from_index(idx, probe=probe) if attach else None,
+        positional_server=BatchedServer.from_index(pidx, probe=probe) if attach else None)
+    host = QueryEngine(idx, positional=pidx)
+    rng = np.random.default_rng(seed)
+
+    words = [w for w in idx.vocab.id_to_token[:300]]
+    rows = []
+    for mix in MIXES:
+        for bs in BATCH_SIZES:
+            queries = sample_traffic(mix, bs, col.docs, words, rng)
+            results = engine.batch(queries)  # compile / warm caches
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                engine.batch(queries)
+            planned_qps = repeats * bs / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            host.batch(queries)
+            host_qps = bs / (time.perf_counter() - t0)
+            distinct = sum(len(r) for r in results)
+            occ = sum(_occurrences(host, q) for q in queries)
+            ratio = distinct / max(1, occ)
+            # planner routing per mix: docs/docs-phrase batch on device,
+            # docs-topk ranks on the host (tf structure) — report the route
+            # actually taken so the columns are honest
+            routes = sorted({engine.planner.plan(q).route for q in queries})
+            rows.append({"mix": mix, "batch_size": bs, "store": store,
+                         "probe": probe, "routes": routes,
+                         "planned_qps": round(planned_qps, 1),
+                         "host_qps": round(host_qps, 1),
+                         "distinct_docs": distinct, "occurrences": occ,
+                         "distinct_over_occurrences": round(ratio, 4)})
+            print(f"{mix:>12} b={bs:<4} planned[{'/'.join(routes)}] "
+                  f"{planned_qps:9.1f} q/s   host {host_qps:9.1f} q/s   "
+                  f"distinct/occ {ratio:.4f}")
+    return rows
+
+
+def main() -> None:
+    from repro.core.registry import backend_names
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", type=str, default="repair_skip",
+                    choices=backend_names(),
+                    help="any registered backend — inverted store or self-index")
+    ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows = run(store=args.store, probe=args.probe, repeats=args.repeats, seed=args.seed)
+    print(json.dumps({"doclist_throughput": rows}))
+
+
+if __name__ == "__main__":
+    main()

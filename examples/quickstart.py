@@ -43,6 +43,18 @@ def main() -> None:
         doc_tokens = tokenize(col.docs[int(d[0])])
         print("  context:", " ".join(doc_tokens[int(off[0]) - 2 : int(off[0]) + 5]))
 
+    # document listing: distinct documents containing a pattern — on a
+    # repetitive collection far fewer docs than occurrences
+    from repro.serving.engine import QueryEngine
+
+    engine = QueryEngine(idx, positional=pos)
+    dq = 'docs: "' + " ".join(phrase) + '"'
+    listed = engine.execute(dq)
+    print(f"\n{dq!r}: {len(hits)} occurrences in {len(listed)} distinct docs "
+          f"-> {listed[:10].tolist()}...")
+    top = engine.execute(f"docs-top3: {q[0]} {q[1]}")
+    print(f"docs-top3 for {q}: {top.tolist()} (ranked by term frequency)")
+
     # self-indexes answer the same queries through the same API (the
     # backend registry: word/AND/phrase against `store="rlcsa"` etc.)
     sub = col.docs[:30]

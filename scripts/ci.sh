@@ -1,0 +1,25 @@
+#!/usr/bin/env sh
+# CI entry point: tier-1 tests, the end-to-end smoke checks, and the
+# cross-backend differential suite under a fixed seed (deterministic runs;
+# override with REPRO_DIFF_SEED=<n> to fuzz a different collection).
+#
+#   scripts/ci.sh                      # full gate
+#   REPRO_DIFF_SEED=123 scripts/ci.sh  # same gate, different fuzz seed
+set -eu
+
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export PYTHONPATH
+REPRO_DIFF_SEED=${REPRO_DIFF_SEED:-20260727}
+export REPRO_DIFF_SEED
+
+echo "== tier-1: pytest (differential suite runs separately below) =="
+python -m pytest -x -q --ignore=tests/test_differential.py
+
+echo "== differential suite (seed $REPRO_DIFF_SEED) =="
+python -m pytest -x -q tests/test_differential.py
+
+echo "== smoke: registry + engine + example (fast pytest subset) =="
+sh scripts/smoke.sh -k "registry or codecs or doclist"
+
+echo "ci OK"

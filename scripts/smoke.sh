@@ -33,7 +33,8 @@ for store in ("repair_skip", "rlcsa"):  # one inverted, one self-index
         NonPositionalIndex.build(col.docs, store=store),
         positional=PositionalIndex.build(col.docs, store=store))
 words = [w for w in engines["repair_skip"].index.vocab.id_to_token[:12]]
-batch = [words[1], f"{words[1]} {words[4]}", '"' + " ".join(ph) + '"']
+batch = [words[1], f"{words[1]} {words[4]}", '"' + " ".join(ph) + '"',
+         f"docs: {words[1]} {words[4]}", 'docs: "' + " ".join(ph) + '"']
 results = {s: e.batch(batch) for s, e in engines.items()}
 for q, a, b in zip(batch, results["repair_skip"], results["rlcsa"]):
     assert np.array_equal(np.sort(np.asarray(a)), np.sort(np.asarray(b))), q

@@ -27,6 +27,7 @@ from .codecs import (
 from .lz_store import VbyteLZendStore
 from .registry import (
     CAP_DEVICE_RESIDENT,
+    CAP_DOC_LIST,
     CAP_EXTRACT,
     CAP_INTERSECT_CANDIDATES,
     CAP_SEEK,
@@ -41,7 +42,7 @@ from .sampled_store import SampledVByteStore
 from .selfindex import LZ77Index, LZEndIndex, RLCSA, WCSA
 from .selfindex.adapter import SelfIndexBackend
 
-SELFINDEX_CAPS = (CAP_SHIFTED_INTERSECT, CAP_EXTRACT)
+SELFINDEX_CAPS = (CAP_SHIFTED_INTERSECT, CAP_EXTRACT, CAP_DOC_LIST)
 
 
 # ----------------------------------------------------------------------
@@ -103,28 +104,28 @@ def build_vbyte_stb(source: BuildSource, B: int = 16):
 # in the compressed domain, sampled variants also seek
 # ----------------------------------------------------------------------
 @register_backend("repair", family=FAMILY_INVERTED, group="ours", paper="§4",
-                  capabilities=(CAP_DEVICE_RESIDENT,),
+                  capabilities=(CAP_DEVICE_RESIDENT, CAP_DOC_LIST),
                   doc="Re-Pair grammar over concatenated d-gap lists")
 def build_repair(source: BuildSource, max_rules: int | None = None):
     return RePairStore.build(source.lists, variant="plain", max_rules=max_rules)
 
 
 @register_backend("repair_skip", family=FAMILY_INVERTED, group="ours", paper="§4.1",
-                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES),
+                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_DOC_LIST),
                   doc="Re-Pair + skipping data (phrase sums)")
 def build_repair_skip(source: BuildSource, max_rules: int | None = None):
     return RePairStore.build(source.lists, variant="skip", max_rules=max_rules)
 
 
 @register_backend("repair_skip_cm", family=FAMILY_INVERTED, group="ours", paper="§4.2",
-                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK),
+                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK, CAP_DOC_LIST),
                   doc="Re-Pair skip + CM-style sampling")
 def build_repair_skip_cm(source: BuildSource, k: int = 64):
     return RePairStore.build(source.lists, variant="skip", sampling=("cm", k))
 
 
 @register_backend("repair_skip_st", family=FAMILY_INVERTED, group="ours", paper="§4.2",
-                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK),
+                  capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK, CAP_DOC_LIST),
                   doc="Re-Pair skip + ST-style sampling")
 def build_repair_skip_st(source: BuildSource, B: int = 1024):
     return RePairStore.build(source.lists, variant="skip", sampling=("st", B))

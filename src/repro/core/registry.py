@@ -29,6 +29,12 @@ code:
                             decode-and-re-anchor pass is needed
   ``extract``               snippet extraction: the backend can reproduce the
                             underlying token stream (self-index property)
+  ``doc_list``              native document listing: distinct documents
+                            containing a pattern in time proportional to the
+                            number of distinct documents, not total
+                            occurrences (grammar phrase-sum skipping for the
+                            Re-Pair stores; one whole-pattern ``locate`` for
+                            the self-indexes) — see ``repro.core.doclist``
   ========================  ====================================================
 
 * :func:`register_backend` — decorator placing a builder in the registry
@@ -58,10 +64,11 @@ CAP_INTERSECT_CANDIDATES = "intersect_candidates"
 CAP_SHIFTED_INTERSECT = "shifted_intersect"
 CAP_DEVICE_RESIDENT = "device_resident"
 CAP_EXTRACT = "extract"
+CAP_DOC_LIST = "doc_list"
 
 ALL_CAPABILITIES = frozenset({
     CAP_SEEK, CAP_INTERSECT_CANDIDATES, CAP_SHIFTED_INTERSECT,
-    CAP_DEVICE_RESIDENT, CAP_EXTRACT,
+    CAP_DEVICE_RESIDENT, CAP_EXTRACT, CAP_DOC_LIST,
 })
 
 # backend families

@@ -24,7 +24,7 @@ import numpy as np
 
 from .codecs.base import ListStore, register_store
 from .dgaps import to_dgaps
-from .registry import CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK
+from .registry import CAP_DEVICE_RESIDENT, CAP_DOC_LIST, CAP_INTERSECT_CANDIDATES, CAP_SEEK
 
 DEAD = np.int64(-(1 << 62))
 
@@ -280,8 +280,10 @@ class RePairStore(ListStore):
         self.op_counter = 0
         # declared capabilities depend on the variant: the (R_B, R_S) arrays
         # anchor directly onto the device either way; skipping search and
-        # sampled seeks are per-variant
-        caps = {CAP_DEVICE_RESIDENT}
+        # sampled seeks are per-variant.  Phrase sums also bound the absolute
+        # range of every compressed phrase, which is what the grammar-aware
+        # document-listing walk needs (repro.core.doclist.grammar_doc_runs)
+        caps = {CAP_DEVICE_RESIDENT, CAP_DOC_LIST}
         if variant == "skip":
             caps.add(CAP_INTERSECT_CANDIDATES)
         if sampling is not None:

@@ -23,11 +23,13 @@ from __future__ import annotations
 import numpy as np
 
 from ..codecs.base import ListStore
-from ..registry import CAP_EXTRACT, CAP_SHIFTED_INTERSECT, BuildSource
+from ..registry import CAP_DOC_LIST, CAP_EXTRACT, CAP_SHIFTED_INTERSECT, BuildSource
 
 
 class SelfIndexBackend(ListStore):
-    capabilities = frozenset({CAP_SHIFTED_INTERSECT, CAP_EXTRACT})
+    # doc_list: a whole pattern is one native `locate`, so document listing
+    # is locate + reduce — no per-term posting intersection is ever needed
+    capabilities = frozenset({CAP_SHIFTED_INTERSECT, CAP_EXTRACT, CAP_DOC_LIST})
 
     def __init__(self, inner, lengths: np.ndarray, doc_starts: np.ndarray | None = None,
                  doc_lists: bool = False, exclude_ids: frozenset[int] = frozenset()):

@@ -3,7 +3,9 @@ the example, and the throughput benchmark).
 
 Query strings in the planner's surface syntax (`engine.parse_query`):
 ``w`` (word), ``w1 w2`` (AND), ``"w1 w2"`` (phrase sampled from real text,
-like the paper's query sets), ``top<k>: w1 w2`` (ranked).
+like the paper's query sets), ``top<k>: w1 w2`` (ranked),
+``docs: w1 w2`` / ``docs: "w1 w2"`` (document listing) and
+``docs-top<k>: ...`` (ranked document retrieval).
 """
 
 from __future__ import annotations
@@ -12,14 +14,15 @@ import numpy as np
 
 from .text import tokenize
 
-MIX_KINDS = ("word", "and", "phrase", "topk")
+MIX_KINDS = ("word", "and", "phrase", "topk", "docs")
 
 
 def sample_traffic(mix: str, n: int, docs: list[str], vocab_words: list[str],
                    rng: np.random.Generator, n_terms: int = 2,
                    k: int = 10) -> list[str]:
-    """n query strings of kind ``mix`` (one of MIX_KINDS, or "mixed" for a
-    round-robin of all four)."""
+    """n query strings of kind ``mix`` (one of MIX_KINDS, plus
+    "docs-phrase" / "docs-topk", or "mixed" for a round-robin of the
+    MIX_KINDS)."""
 
     def rand_word() -> str:
         return vocab_words[int(rng.integers(len(vocab_words)))]
@@ -34,7 +37,10 @@ def sample_traffic(mix: str, n: int, docs: list[str], vocab_words: list[str],
         return '"' + " ".join(toks[i : i + n_terms]) + '"'
 
     gens = {"word": rand_word, "and": rand_and, "phrase": rand_phrase,
-            "topk": lambda: f"top{k}: {rand_and()}"}
+            "topk": lambda: f"top{k}: {rand_and()}",
+            "docs": lambda: f"docs: {rand_and()}",
+            "docs-phrase": lambda: f"docs: {rand_phrase()}",
+            "docs-topk": lambda: f"docs-top{k}: {rand_and()}"}
     if mix == "mixed":
         return [gens[MIX_KINDS[i % len(MIX_KINDS)]]() for i in range(n)]
     return [gens[mix]() for _ in range(n)]

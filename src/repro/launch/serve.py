@@ -1,10 +1,11 @@
 """Serving driver: build the compressed indexes over a collection and serve
-batched word / AND / phrase / top-k traffic through the query planner
-(host engine + jitted anchored device paths, windowed-exact).
+batched word / AND / phrase / top-k / document-listing traffic through the
+query planner (host engine + jitted anchored device paths, windowed-exact).
 
     PYTHONPATH=src python -m repro.launch.serve --articles 10 --queries 64
     PYTHONPATH=src python -m repro.launch.serve --mode phrase --terms 3
     PYTHONPATH=src python -m repro.launch.serve --mode mixed --probe kernel
+    PYTHONPATH=src python -m repro.launch.serve --mode docs-phrase
 """
 
 from __future__ import annotations
@@ -31,7 +32,8 @@ def main() -> None:
                     choices=backend_names(),
                     help="any registered backend — inverted store or self-index")
     ap.add_argument("--mode", type=str, default="and",
-                    choices=["and", "phrase", "topk", "mixed"])
+                    choices=["and", "phrase", "topk", "docs", "docs-phrase",
+                             "docs-topk", "mixed"])
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -45,7 +47,9 @@ def main() -> None:
     idx = NonPositionalIndex.build(col.docs, store=args.store)
     print(f"built {args.store} non-positional index over {col.n_docs} docs "
           f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
-    need_positional = args.mode in ("phrase", "mixed")
+    # non-phrase docs: serves from the non-positional index; only phrase
+    # listing and tf ranking need the positional one
+    need_positional = args.mode in ("phrase", "mixed", "docs-phrase", "docs-topk")
     pidx = None
     if need_positional:
         t0 = time.perf_counter()

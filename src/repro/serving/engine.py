@@ -3,15 +3,18 @@
 Three tiers:
 
 * :class:`QueryEngine` — host-facing service: executes word / AND / phrase /
-  ranked top-k queries against built indexes (any list store) with the best
-  intersection path per store; used by the examples and benchmarks.
+  ranked top-k / document-listing (``docs:`` / ``docs-top<k>:``) queries
+  against built indexes (any list store) with the best intersection path per
+  store; used by the examples and benchmarks.
 
 * The **query planner** (:func:`parse_query`, :class:`QueryPlanner`) —
-  classifies each query (single-word / conjunctive / phrase / ranked top-k),
-  picks the index it must run against (phrase → positional, §5.2; the rest →
-  non-positional, §5.1) and the best execution path for the store backing
-  that index (Re-Pair skipping, sampled seek, merge/SVS on decoded lists, or
-  the batched device path when anchored arrays are resident).
+  classifies each query (single-word / conjunctive / phrase / ranked top-k /
+  doc listing), picks the index it must run against (phrase and phrase
+  doc-listing → positional, §5.2; the rest → non-positional, §5.1) and the
+  best execution path for the store backing that index (Re-Pair skipping,
+  sampled seek, merge/SVS on decoded lists, the doc-run / grammar listing
+  structures of ``core.doclist``, or the batched device path when anchored
+  arrays are resident).
 
 * The device-side batched steps (:func:`make_serve_step`,
   :class:`BatchedServer`) — padded (batch, max_terms) term-id matrices; each
@@ -36,9 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.anchors import AnchoredIndex, build_anchored, member_batch
+from ..core.doclist import (
+    DocRunIndex,
+    doc_list_terms,
+    positions_to_doc_counts,
+    positions_to_docs,
+    rank_docs,
+)
 from ..core.index import NonPositionalIndex, PositionalIndex
 from ..core.registry import (
     CAP_DEVICE_RESIDENT,
+    CAP_DOC_LIST,
     CAP_INTERSECT_CANDIDATES,
     CAP_SEEK,
     CAP_SHIFTED_INTERSECT,
@@ -52,17 +63,23 @@ WORD = "word"
 AND = "and"
 PHRASE = "phrase"
 TOPK = "topk"
+DOCS = "docs"
+DOCS_TOPK = "docs_topk"
 
 _TOPK_RE = re.compile(r"^top(\d+):\s*(.+)$")
+_DOCS_RE = re.compile(r"^docs(?:-top(\d+))?:\s*(.+)$")
 
 
 @dataclass(frozen=True)
 class ParsedQuery:
-    """A classified query: ``kind`` in {word, and, phrase, topk}."""
+    """A classified query: ``kind`` in {word, and, phrase, topk, docs,
+    docs_topk}.  ``phrase`` marks doc-listing queries whose terms form a
+    contiguous phrase (``docs: "a b"``) rather than a conjunction."""
 
     kind: str
     terms: tuple[str, ...]
     k: int = 0
+    phrase: bool = False
 
 
 def parse_query(q) -> ParsedQuery:
@@ -72,7 +89,11 @@ def parse_query(q) -> ParsedQuery:
     * ``"w"`` — single word;
     * ``"w1 w2 ..."`` — conjunctive (AND);
     * ``'"w1 w2 ..."'`` (quoted) — phrase;
-    * ``"top<k>: w1 w2"`` — ranked AND, top-k by idf proxy.
+    * ``"top<k>: w1 w2"`` — ranked AND, top-k by idf proxy;
+    * ``"docs: w1 w2"`` / ``'docs: "w1 w2"'`` — document listing: distinct
+      docs containing all words (resp. the exact phrase);
+    * ``"docs-top<k>: ..."`` — ranked document retrieval: top-k docs by
+      pattern frequency.
     """
     if isinstance(q, ParsedQuery):
         return q
@@ -80,6 +101,14 @@ def parse_query(q) -> ParsedQuery:
         terms = tuple(q)
         return ParsedQuery(WORD if len(terms) == 1 else AND, terms)
     s = q.strip()
+    m = _DOCS_RE.match(s)
+    if m:
+        body = m.group(2).strip()
+        phrase = len(body) >= 2 and body[0] == '"' and body[-1] == '"'
+        terms = tuple((body[1:-1] if phrase else body).split())
+        if m.group(1) is None:
+            return ParsedQuery(DOCS, terms, phrase=phrase)
+        return ParsedQuery(DOCS_TOPK, terms, k=int(m.group(1)), phrase=phrase)
     m = _TOPK_RE.match(s)
     if m:
         return ParsedQuery(TOPK, tuple(m.group(2).split()), k=int(m.group(1)))
@@ -113,6 +142,23 @@ def _host_strategy(store) -> str:
     return "svs-merge"
 
 
+def _doclist_strategy(index_name: str, store, pq: "ParsedQuery") -> str:
+    """Name the host document-listing path (capability-selected, like
+    :func:`_host_strategy` but for the ``docs`` / ``docs-topk`` kinds)."""
+    caps = capabilities_of(store)
+    if index_name == "positional":
+        if CAP_SHIFTED_INTERSECT in caps:
+            return "self-doclist"  # one whole-pattern locate, then reduce
+        if len(pq.terms) == 1:
+            # single-term listing via the run structure; grammar stores walk
+            # phrase sums without expanding within-document phrases
+            return "grammar-doclist" if CAP_DOC_LIST in caps else "doc-runs"
+        return "reduce-doclist"  # shifted intersect / run intersect + reduce
+    # non-positional postings are doc ids already: the conjunctive path is
+    # the listing, so the strategy is the store's intersection path
+    return "doclist+" + _host_strategy(store)
+
+
 class QueryPlanner:
     """Routes parsed queries to the best execution path.
 
@@ -131,20 +177,36 @@ class QueryPlanner:
 
     def plan(self, q, prefer_device: bool = True) -> QueryPlan:
         pq = parse_query(q)
-        if pq.kind == PHRASE:
+        needs_positional = pq.kind == PHRASE or (
+            pq.kind in (DOCS, DOCS_TOPK)
+            and (pq.phrase or self.engine.index is None))
+        if needs_positional:
             index_name, idx, server = "positional", self.engine.positional, self.engine.positional_server
         else:
             index_name, idx, server = "nonpositional", self.engine.index, self.engine.server
         if idx is None:
             raise ValueError(f"{pq.kind} query requires the {index_name} index")
+        # single-word reads are a pure list decode — nothing to batch — except
+        # phrase doc listing, where the device dedup collapses occurrences
+        multi_ok = len(pq.terms) > 1 or (pq.kind == DOCS and pq.phrase)
+        # non-phrase doc listing on the positional index (positional-only
+        # engines) intersects per-term *document runs*, not positions — the
+        # device AND step would intersect disjoint position lists
+        doc_route_ok = (pq.kind not in (DOCS, DOCS_TOPK)
+                        or pq.phrase or index_name == "nonpositional")
         device_ok = (
             prefer_device
             and server is not None
-            and len(pq.terms) > 1
+            and pq.kind != DOCS_TOPK  # ranking needs the host tf structure
+            and multi_ok
+            and doc_route_ok
             and all(_lookup(idx, t) is not None for t in pq.terms)
         )
         if device_ok:
             return QueryPlan(pq, index_name, "device", f"anchored-{pq.kind}")
+        if pq.kind in (DOCS, DOCS_TOPK):
+            return QueryPlan(pq, index_name, "host",
+                             _doclist_strategy(index_name, idx.store, pq))
         return QueryPlan(pq, index_name, "host", _host_strategy(idx.store))
 
 
@@ -157,18 +219,25 @@ def _lookup(index, term: str):
 # ----------------------------------------------------------------------
 @dataclass
 class QueryEngine:
-    index: NonPositionalIndex
+    # a positional-only engine (index=None) still serves phrase and document
+    # listing queries through the doc-run / grammar structures
+    index: NonPositionalIndex | None
     positional: PositionalIndex | None = None
     server: "BatchedServer | None" = None  # device path over `index`
     positional_server: "BatchedServer | None" = None  # device path over `positional`
 
     def __post_init__(self):
         self.planner = QueryPlanner(self)
+        self._doc_run_index: DocRunIndex | None = None
 
     def word(self, w: str) -> np.ndarray:
+        if self.index is None:
+            raise ValueError("word queries require the nonpositional index")
         return np.asarray(self.index.query_word(w))
 
     def conjunctive(self, words: list[str]) -> np.ndarray:
+        if self.index is None:
+            raise ValueError("AND queries require the nonpositional index")
         return np.asarray(self.index.query_and(words))
 
     def phrase(self, tokens: list[str]) -> np.ndarray:
@@ -193,6 +262,67 @@ class QueryEngine:
         order = np.argsort(-weights, kind="stable")
         return docs[order][:k]
 
+    # -- document listing (the docs: / docs-top<k>: workload) -----------
+    def doc_runs(self) -> DocRunIndex:
+        """The ILCP-style per-term document-run structure over the
+        positional store (built lazily, cached; see ``core.doclist``)."""
+        if self.positional is None:
+            raise ValueError("the doc-run structure requires the PositionalIndex")
+        if self._doc_run_index is None:
+            self._doc_run_index = DocRunIndex(self.positional.store,
+                                              self.positional.doc_starts)
+        return self._doc_run_index
+
+    def doc_list(self, terms: list[str], phrase: bool = False) -> np.ndarray:
+        """Distinct (sorted) doc ids containing all ``terms`` (``phrase`` —
+        containing the exact phrase).  Phrase listing runs on the positional
+        index: the pattern's positions reduce to documents through the
+        doc-boundary array, with the run / grammar fast paths for
+        single-term patterns.  Word listing uses the non-positional index
+        when present (its postings *are* doc ids) and falls back to
+        intersecting per-term document runs for positional-only engines."""
+        terms = list(terms)
+        if not terms:
+            return np.zeros(0, dtype=np.int64)
+        if phrase or self.index is None:
+            if self.positional is None:
+                raise ValueError("phrase document listing requires the PositionalIndex")
+            ids = [self.positional.lookup(t) for t in terms]
+            if any(i is None for i in ids):
+                return np.zeros(0, dtype=np.int64)
+            if phrase and len(terms) > 1:
+                return positions_to_docs(self.phrase(terms),
+                                         self.positional.doc_starts)
+            # single token, or positional-only conjunction: per-term runs
+            return doc_list_terms(self.doc_runs(), ids)
+        docs = self.conjunctive(terms) if len(terms) > 1 else self.word(terms[0])
+        return positions_to_docs(docs, None)
+
+    def doc_topk(self, terms: list[str], k: int = 10, phrase: bool = False) -> np.ndarray:
+        """Ranked document retrieval: top-``k`` docs by pattern frequency
+        (phrase occurrences, or summed term frequencies for conjunctions),
+        ties broken by lowest doc id.  Frequencies come from the positional
+        doc-run structure; without a positional index every document counts
+        once and the ranking degenerates to doc-id order."""
+        terms = list(terms)
+        docs = self.doc_list(terms, phrase=phrase)
+        if len(docs) == 0:
+            return docs
+        k = k or 10
+        if self.positional is None:
+            return docs[:k]
+        if phrase and len(terms) > 1:
+            pdocs, counts = positions_to_doc_counts(self.phrase(terms),
+                                                    self.positional.doc_starts)
+            return rank_docs(pdocs, counts, k)
+        runs = self.doc_runs()
+        scores = np.zeros(len(docs), dtype=np.int64)
+        for t in terms:
+            tid = self.positional.lookup(t)
+            if tid is not None:
+                scores += runs.term_frequencies(tid, docs)
+        return rank_docs(docs, scores, k)
+
     def execute(self, q) -> np.ndarray:
         """Plan and run one query (host path; device batches go through
         :meth:`batch`, which groups by kind first)."""
@@ -207,6 +337,10 @@ class QueryEngine:
             return self.phrase(list(pq.terms))
         if pq.kind == TOPK:
             return self.ranked_and(list(pq.terms), k=pq.k or 10)
+        if pq.kind == DOCS:
+            return self.doc_list(list(pq.terms), phrase=pq.phrase)
+        if pq.kind == DOCS_TOPK:
+            return self.doc_topk(list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
         raise ValueError(pq.kind)
 
     def batch(self, queries: list) -> list[np.ndarray]:
@@ -218,15 +352,17 @@ class QueryEngine:
         groups: dict[tuple, list[int]] = {}
         for i, pl in enumerate(plans):
             if pl.route == "device":
-                key = (pl.index, pl.query.kind, pl.query.k)
+                key = (pl.index, pl.query.kind, pl.query.k, pl.query.phrase)
                 groups.setdefault(key, []).append(i)
             else:
                 out[i] = self.execute(pl.query)
-        for (index_name, kind, k), idxs in groups.items():
+        for (index_name, kind, k, phrase), idxs in groups.items():
             server = self.server if index_name == "nonpositional" else self.positional_server
             sub = [plans[i].query for i in idxs]
             if kind == TOPK:
                 res = server.topk([list(p.terms) for p in sub], k=k or 10)
+            elif kind == DOCS:
+                res = server.doclist([list(p.terms) for p in sub], phrase=phrase)
             elif kind == PHRASE:
                 res = server.phrase([list(p.terms) for p in sub])
             else:
@@ -318,7 +454,8 @@ def _as_anchored(index: dict) -> AnchoredIndex:
 
 
 def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
-                    n_docs: float = 0.0, probe: str = "vmap"):
+                    n_docs: float = 0.0, probe: str = "vmap",
+                    doclist: bool = False):
     """Build a batched device step.
 
     ``mode`` is "and" (conjunctive doc queries) or "phrase" (offset-shifted
@@ -326,8 +463,15 @@ def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
     ``(candidate postings (B, C), match mask (B, C))`` for the window at
     ``row_start``; with ``topk == k`` it additionally ranks on device and
     returns ``(top postings (B, k), top scores (B, k), top valid (B, k))``.
-    ``probe="kernel"`` routes the inner membership probes through the Pallas
-    ``anchor_intersect`` tiled-compare kernel (interpret mode off-TPU).
+    With ``doclist=True`` the step returns ``(doc ids (B, C), keep (B, C))``:
+    matching positions map to documents through the ``doc_starts`` array in
+    ``index`` (identity when absent — non-positional postings are doc ids)
+    and duplicates are dropped *on device* by a segment-max scan — matched
+    values are sorted within a window, so an entry is the first of its
+    document iff its doc id exceeds the running maximum of everything
+    before it.  ``probe="kernel"`` routes the inner membership probes
+    through the Pallas ``anchor_intersect`` tiled-compare kernel (interpret
+    mode off-TPU).
     """
     phrase = mode == PHRASE
     member = None
@@ -340,6 +484,15 @@ def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
         cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0], row_start)
         match = _probe_terms(idx, query_terms, query_lens, cand_vals, cand_valid,
                              max_terms, phrase, member=member)
+        if doclist:
+            vals = cand_vals - 1
+            ds = index.get("doc_starts")
+            doc = vals if ds is None else jnp.searchsorted(ds, vals, side="right") - 1
+            doc = jnp.where(match, doc, -1)
+            prev = jax.lax.associative_scan(jnp.maximum, doc, axis=1)
+            prev = jnp.concatenate(
+                [jnp.full((doc.shape[0], 1), -1, doc.dtype), prev[:, :-1]], axis=1)
+            return doc, match & (doc > prev)
         if not topk:
             return cand_vals - 1, match
         w = _idf_weights(idx, query_terms, query_lens, max_terms, n_docs)
@@ -395,6 +548,9 @@ class BatchedServer:
         arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
                   "expand": aidx.expand, "expand_valid": aidx.expand_valid,
                   "lengths": aidx.lengths}
+        if isinstance(index, PositionalIndex):
+            # device-side position -> document mapping for doc listing
+            arrays["doc_starts"] = jnp.asarray(index.doc_starts, jnp.int32)
         return cls(host_index=index, arrays=arrays,
                    n_docs=float(index.universe_size), probe=probe)
 
@@ -423,13 +579,13 @@ class BatchedServer:
             ql[i] = len(ids)
         return qt, ql, ok
 
-    def _step(self, kind: str, width: int, topk: int = 0):
-        key = (kind, width, topk)
+    def _step(self, kind: str, width: int, topk: int = 0, doclist: bool = False):
+        key = (kind, width, topk, doclist)
         if key not in self._steps:
             mode = PHRASE if kind == PHRASE else AND
             self._steps[key] = jax.jit(make_serve_step(
                 max_terms=width, mode=mode, topk=topk, n_docs=self.n_docs,
-                probe=self.probe))
+                probe=self.probe, doclist=doclist))
         return self._steps[key]
 
     def _n_windows(self, qt: np.ndarray, ok: np.ndarray) -> int:
@@ -462,6 +618,28 @@ class BatchedServer:
         """Batched phrase: sorted start positions per query (positional
         index).  Use ``positions_to_docs`` on the host index for (doc, off)."""
         return self._sweep(PHRASE, queries)
+
+    def doclist(self, queries: list[list[str]], phrase: bool = False) -> list[np.ndarray]:
+        """Batched document listing: sorted distinct doc ids per query.
+
+        The position->document mapping and the per-window dedup (segment-max
+        over candidate doc ids) run *inside* the jitted step, so only the
+        distinct survivors of each window cross back to the host, which
+        unions them across windows — exact for lists of any length."""
+        kind = PHRASE if phrase else AND
+        qt, ql, ok = self.encode(queries, sort_by_length=not phrase)
+        step = self._step(kind, qt.shape[1], doclist=True)
+        hits: list[list[np.ndarray]] = [[] for _ in queries]
+        for w in range(self._n_windows(qt, ok)):
+            docs, keep = step(self.arrays, jnp.asarray(qt), jnp.asarray(ql),
+                              w * MAX_CAND_ROWS)
+            docs, keep = np.asarray(docs), np.asarray(keep)
+            for i in range(len(queries)):
+                if ok[i]:
+                    hits[i].append(docs[i][keep[i]])
+        empty = np.zeros(0, np.int64)
+        return [np.unique(np.concatenate(h)).astype(np.int64) if (o and h) else empty
+                for h, o in zip(hits, ok)]
 
     def topk(self, queries: list[list[str]], k: int = 10) -> list[np.ndarray]:
         """Batched ranked AND: first k matches under the idf-proxy weight

@@ -48,6 +48,40 @@ def test_empty_list(name):
     assert len(codec.decode(enc)) == 0
 
 
+# adversarial gap patterns: the boundaries every codec must survive —
+# singletons, degenerate all-equal runs (zero-entropy input), and gaps at
+# the top of the 32-bit range (sampled stores cumulate these into 64-bit
+# absolutes; no codec may wrap or crash)
+ADVERSARIAL_GAPS = {
+    "single_min": [1],
+    "single_max32": [2**32 - 1],
+    "two_extremes": [1, 2**32 - 1],
+    "all_equal_small": [7] * 50,
+    "all_equal_ones": [1] * 65,  # crosses the 64-element block size
+    "all_equal_max32": [2**32 - 1] * 33,
+    "max32_mixed": [1, 2**32 - 1, 1, 2**31, 2**31 - 1, 2**32 - 1],
+    "powers_of_two": [2**k for k in range(32)],
+    "ramp_then_run": list(range(1, 40)) + [1] * 40,
+}
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@pytest.mark.parametrize("pattern", sorted(ADVERSARIAL_GAPS))
+def test_adversarial_roundtrip(name, pattern):
+    """Round-trip identity (gap and absolute domains) on adversarial
+    inputs; `nbits` must stay a sane non-negative payload size."""
+    codec = CODEC_REGISTRY[name]()
+    g = np.asarray(ADVERSARIAL_GAPS[pattern], dtype=np.int64)
+    enc = codec.encode(g)
+    assert enc.n == len(g) and enc.nbits >= 0, (name, pattern)
+    dec = codec.decode(enc)
+    assert dec.dtype == g.dtype and np.array_equal(dec, g), (name, pattern)
+    absolute = codec.decode_absolute(enc)
+    assert np.array_equal(absolute, from_dgaps(g)), (name, pattern)
+    # cumulating max-32-bit gaps exceeds 2**32: absolutes must not wrap
+    assert absolute[-1] == int(g.sum()) - 1, (name, pattern)
+
+
 def test_dgap_inverse():
     p = np.asarray([0, 1, 5, 6, 100, 2**30])
     validate_posting_list(p)

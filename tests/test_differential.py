@@ -1,0 +1,189 @@
+"""Cross-backend differential fuzz suite.
+
+With 23 registered backends behind one protocol, the main correctness risk
+is *drift*: one backend answering a query differently from the rest.  This
+suite builds randomized versioned collections over a range of mutation
+rates — including the degenerate 0% (all versions identical: maximal
+repetitiveness) and 100% (every word position mutated) — and asserts every
+registered backend returns byte-identical word / AND / phrase / topk /
+docs / docs-topk answers vs a brute-force NumPy reference, through the same
+index / engine API.
+
+Reproduction: every assertion message carries the ``(seed, edit_rate,
+store, query)`` tuple that produced it; the base seed can be pinned with
+``REPRO_DIFF_SEED`` (the CI script fixes it), so a failure shrinks to a
+one-liner: rebuild the named collection and replay the named query.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.core.registry import backend_names
+from repro.data import generate_collection
+from repro.data.text import STOPWORDS, is_word_token, tokenize
+from repro.serving.engine import BatchedServer, QueryEngine, parse_query
+
+BASE_SEED = int(os.environ.get("REPRO_DIFF_SEED", "20260727"))
+EDIT_RATES = (0.0, 0.2, 1.0)  # none / moderate / total mutation
+ALL_BACKENDS = backend_names()
+
+# one backend per family for the cross-family agreement check:
+# run-length (rice_runs), LZ (vbyte_lzend), grammar (repair_skip),
+# self-index (rlcsa)
+FAMILY_REPS = ("rice_runs", "vbyte_lzend", "repair_skip", "rlcsa")
+
+
+# ----------------------------------------------------------------------
+# randomized fixtures + NumPy reference
+# ----------------------------------------------------------------------
+class RefCase:
+    """One randomized collection plus its brute-force answers."""
+
+    def __init__(self, rate: float, seed: int):
+        self.rate = rate
+        self.seed = seed
+        self.col = generate_collection(n_articles=2, versions_per_article=4,
+                                       words_per_doc=45, edit_rate=rate,
+                                       seed=seed)
+        self.docs = self.col.docs
+        # folded word-token sets / counts per doc (non-positional semantics)
+        self.word_sets = []
+        self.tok_lists = []
+        for doc in self.docs:
+            toks = tokenize(doc)
+            self.tok_lists.append(toks)
+            self.word_sets.append({t.lower() for t in toks if is_word_token(t)
+                                   and t.lower() not in STOPWORDS})
+        # reference vocab (identical across backends): build once with vbyte
+        self.ref_np = NonPositionalIndex.build(self.docs, store="vbyte")
+        self.ref_pos = PositionalIndex.build(self.docs, store="vbyte",
+                                             keep_text=True)
+        self.stream = self.ref_pos.token_stream
+
+    # -- brute-force answers -------------------------------------------
+    def brute_docs(self, words) -> np.ndarray:
+        if any(self.ref_np.word_id(w) is None for w in words):
+            return np.zeros(0, dtype=np.int64)
+        return np.asarray([d for d, s in enumerate(self.word_sets)
+                           if all(w in s for w in words)], dtype=np.int64)
+
+    def brute_phrase(self, toks) -> np.ndarray:
+        ids = [self.ref_pos.token_id(t) for t in toks]
+        if any(i is None for i in ids):
+            return np.zeros(0, dtype=np.int64)
+        m = len(ids)
+        s = self.stream
+        return np.asarray([p for p in range(len(s) - m + 1)
+                           if all(s[p + j] == ids[j] for j in range(m))],
+                          dtype=np.int64)
+
+    def brute_phrase_docs(self, toks) -> np.ndarray:
+        pos = self.brute_phrase(toks)
+        d = np.searchsorted(self.ref_pos.doc_starts, pos, side="right") - 1
+        return np.unique(d)
+
+    def brute_docs_topk(self, words, k: int) -> np.ndarray:
+        docs = self.brute_docs(words)
+        if len(docs) == 0:
+            return docs
+        scores = np.asarray([sum(self.tok_lists[d].count(w) for w in words)
+                             for d in docs], dtype=np.int64)
+        order = np.argsort(-scores, kind="stable")
+        return docs[order][:k]
+
+    def sample_queries(self, rng) -> list[tuple[str, np.ndarray]]:
+        """(query string, brute reference) pairs drawn from the collection."""
+        vocab = self.ref_np.vocab.id_to_token
+        w = [vocab[int(rng.integers(len(vocab)))] for _ in range(6)]
+        toks = self.tok_lists[int(rng.integers(len(self.docs)))]
+        i = int(rng.integers(0, max(1, len(toks) - 3)))
+        ph = toks[i : i + 2]
+        ph3 = toks[i : i + 3]
+        out = [
+            (w[0], self.brute_docs([w[0]])),
+            (f"{w[1]} {w[2]}", self.brute_docs([w[1], w[2]])),
+            (f"{w[0]} {w[3]} {w[4]}", self.brute_docs([w[0], w[3], w[4]])),
+            ('"' + " ".join(ph) + '"', self.brute_phrase(ph)),
+            ('"' + " ".join(ph3) + '"', self.brute_phrase(ph3)),
+            (f"top4: {w[1]} {w[2]}", self.brute_docs([w[1], w[2]])[:4]),
+            (f"docs: {w[0]}", self.brute_docs([w[0]])),
+            (f"docs: {w[1]} {w[2]}", self.brute_docs([w[1], w[2]])),
+            ('docs: "' + " ".join(ph) + '"', self.brute_phrase_docs(ph)),
+            (f"docs-top3: {w[1]} {w[2]}", self.brute_docs_topk([w[1], w[2]], 3)),
+            ("docs: zzz-never-a-word", np.zeros(0, dtype=np.int64)),
+        ]
+        return out
+
+
+@pytest.fixture(scope="module", params=EDIT_RATES, ids=lambda r: f"rate={r}")
+def case(request) -> RefCase:
+    rate = request.param
+    return RefCase(rate, BASE_SEED + EDIT_RATES.index(rate))
+
+
+# ----------------------------------------------------------------------
+# every backend vs the reference, all query kinds
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("store", ALL_BACKENDS)
+def test_backend_matches_reference(case, store):
+    idx = NonPositionalIndex.build(case.docs, store=store)
+    pidx = PositionalIndex.build(case.docs, store=store)
+    engine = QueryEngine(idx, positional=pidx)
+    rng = np.random.default_rng(case.seed + 1)
+    for q, ref in case.sample_queries(rng):
+        got = np.asarray(engine.execute(q))
+        if parse_query(q).kind in ("word", "and", "phrase"):
+            got = np.sort(np.unique(got))
+        assert got.dtype == ref.dtype and np.array_equal(got, ref), (
+            f"differential mismatch: seed={case.seed} edit_rate={case.rate} "
+            f"store={store!r} query={q!r} got={got.tolist()} "
+            f"want={ref.tolist()}")
+
+
+# ----------------------------------------------------------------------
+# cross-family byte-identity + device/host doc-listing agreement
+# ----------------------------------------------------------------------
+def test_doc_listing_identical_across_families(case):
+    """Acceptance: docs / docs-topk answers agree byte-for-byte across the
+    run-length, LZ, grammar, and self-index families."""
+    engines = {}
+    for store in FAMILY_REPS:
+        engines[store] = QueryEngine(
+            NonPositionalIndex.build(case.docs, store=store),
+            positional=PositionalIndex.build(case.docs, store=store))
+    rng = np.random.default_rng(case.seed + 2)
+    queries = [q for q, _ in case.sample_queries(rng)
+               if parse_query(q).kind in ("docs", "docs_topk")]
+    base = FAMILY_REPS[0]
+    for q in queries:
+        want = np.asarray(engines[base].execute(q))
+        for store in FAMILY_REPS[1:]:
+            got = np.asarray(engines[store].execute(q))
+            assert got.dtype == want.dtype and np.array_equal(got, want), (
+                f"family drift: seed={case.seed} edit_rate={case.rate} "
+                f"query={q!r} {base}={want.tolist()} {store}={got.tolist()}")
+
+
+def test_device_doclist_matches_host(case):
+    """The batched device listing path (segment-max dedup inside the
+    windowed sweep) returns exactly the host answers."""
+    idx = NonPositionalIndex.build(case.docs, store="repair_skip")
+    pidx = PositionalIndex.build(case.docs, store="repair_skip")
+    dev = QueryEngine(idx, positional=pidx,
+                      server=BatchedServer.from_index(idx),
+                      positional_server=BatchedServer.from_index(pidx))
+    host = QueryEngine(idx, positional=pidx)
+    rng = np.random.default_rng(case.seed + 3)
+    queries = [q for q, _ in case.sample_queries(rng)
+               if parse_query(q).kind == "docs"]
+    plans = [dev.planner.plan(q) for q in queries]
+    assert any(p.route == "device" for p in plans), queries
+    got = dev.batch(queries)
+    for q, g in zip(queries, got):
+        h = np.asarray(host.execute(q))
+        assert np.array_equal(np.asarray(g), h), (
+            f"device/host drift: seed={case.seed} edit_rate={case.rate} "
+            f"query={q!r} device={np.asarray(g).tolist()} host={h.tolist()}")

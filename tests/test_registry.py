@@ -86,6 +86,39 @@ def test_selfindex_needs_stream():
         build_backend("rlcsa", [np.arange(3)])
 
 
+def test_unknown_backend_error_lists_every_registered_name():
+    """The PR-2 contract: the unknown-name ValueError names the live
+    registry, not a subset — a user can copy any listed name and proceed."""
+    with pytest.raises(ValueError) as ei:
+        build_backend("nope", [np.arange(3)])
+    msg = str(ei.value)
+    for name in ALL_BACKENDS:
+        assert name in msg, f"{name!r} missing from: {msg}"
+
+
+def test_bad_kwargs_error_lists_accepted_names():
+    """The stray-kwarg ValueError names both the offender and the full
+    accepted set (or says there is none)."""
+    lists = [np.arange(4, dtype=np.int64)]
+    with pytest.raises(ValueError) as ei:
+        build_backend("repair_skip_st", lists, window=9, B=4)
+    msg = str(ei.value)
+    assert "window" in msg and "accepted: B" in msg
+    # backends with no build kwargs say so instead of listing nothing
+    with pytest.raises(ValueError, match=r"accepted: \(none\)"):
+        build_backend("vbyte", lists, k=3)
+
+
+def test_index_build_propagates_registry_errors():
+    """Both index builders surface the same registry ValueErrors eagerly
+    (before any tokenization work)."""
+    for builder in (NonPositionalIndex.build, PositionalIndex.build):
+        with pytest.raises(ValueError, match="registered backends.*vbyte"):
+            builder(["a b c"], store="definitely_missing")
+        with pytest.raises(ValueError, match="unexpected build kwargs.*accepted: sample_rate"):
+            builder(["a b c"], store="rlcsa", sample_rate_typo=8)
+
+
 def test_declared_capabilities_are_valid_and_match_instances(tiny_collection):
     for name in ALL_BACKENDS:
         spec = get_backend_spec(name)

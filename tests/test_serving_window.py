@@ -1,0 +1,96 @@
+"""Windowed-sweep boundary regression guard (the PR-1 truncation bug class).
+
+The batched device path scans MAX_CAND_ROWS C-entries of the driving list
+per window and sweeps windows until the list is exhausted.  Off-by-one bugs
+in that sweep bite exactly at the window size, so these tests pin driving
+lists whose C-entry counts are *exactly* MAX_CAND_ROWS, MAX_CAND_ROWS ± 1,
+and 3 * MAX_CAND_ROWS, and require device results identical to the host
+engine.  `max_rules=0` disables grammar rounds so every posting is one
+C-entry — list length == C-entry count, deterministically.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.anchors import build_anchored
+from repro.core.index import NonPositionalIndex
+from repro.serving.engine import (
+    MAX_CAND_ROWS,
+    BatchedServer,
+    QueryEngine,
+    make_serve_step,
+)
+
+BOUNDARY_LENGTHS = (MAX_CAND_ROWS - 1, MAX_CAND_ROWS, MAX_CAND_ROWS + 1,
+                    3 * MAX_CAND_ROWS)
+N_DOCS = 3 * MAX_CAND_ROWS + 8
+
+
+@pytest.fixture(scope="module")
+def boundary_index():
+    """A collection where word ``w<L>`` occurs in exactly docs [0, L) and
+    ``common`` in every doc, indexed with ``max_rules=0`` so posting-list
+    length equals C-entry count exactly."""
+    docs = []
+    for d in range(N_DOCS):
+        words = ["common"] + [f"w{L}" for L in BOUNDARY_LENGTHS if d < L]
+        docs.append(" ".join(words))
+    idx = NonPositionalIndex.build(docs, store="repair", max_rules=0)
+    server = BatchedServer.from_index(idx)
+    return idx, server
+
+
+@pytest.mark.parametrize("length", BOUNDARY_LENGTHS)
+def test_and_at_window_boundaries(boundary_index, length):
+    idx, server = boundary_index
+    wid = idx.word_id(f"w{length}")
+    c_off = np.asarray(server.arrays["c_offsets"])
+    assert int(c_off[wid + 1] - c_off[wid]) == length, "C-entries must equal list length"
+    host = QueryEngine(idx)
+    q = [f"w{length}", "common"]
+    dev = server.conjunctive([q])[0]
+    want = np.asarray(host.conjunctive(q))
+    assert np.array_equal(dev, want), (length, len(dev), len(want))
+    assert len(dev) == length  # w<L> ∩ all-docs == [0, L)
+    # the sweep runs exactly ceil(L / MAX_CAND_ROWS) windows
+    qt, ql, ok = server.encode([q], sort_by_length=True)
+    assert server._n_windows(qt, ok) == -(-length // MAX_CAND_ROWS)
+
+
+@pytest.mark.parametrize("length", BOUNDARY_LENGTHS)
+def test_doclist_at_window_boundaries(boundary_index, length):
+    """The device doc-listing dedup must also be window-exact."""
+    idx, server = boundary_index
+    host = QueryEngine(idx)
+    q = [f"w{length}", "common"]
+    dev = server.doclist([q])[0]
+    want = host.doc_list(q)
+    assert np.array_equal(dev, want), (length, len(dev), len(want))
+
+
+def test_phrase_step_at_exact_window_multiple():
+    """Anchored phrase probing where the driving list is an exact multiple
+    of the window (no partial final window to hide truncation)."""
+    n = 4 * MAX_CAND_ROWS
+    a = (np.arange(n, dtype=np.int64) * 3)          # len == 4 * window
+    b = a[::2] + 1                                  # phrase partner
+    aidx = build_anchored([a, b], max_rules=0)
+    c_off = np.asarray(aidx.c_offsets)
+    assert int(c_off[1] - c_off[0]) == n
+    arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+              "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+              "lengths": aidx.lengths}
+    step = jax.jit(make_serve_step(max_terms=2, mode="phrase"))
+    qt = jnp.asarray([[0, 1]], jnp.int32)
+    ql = jnp.asarray([2], jnp.int32)
+    hits = []
+    for w in range(-(-n // MAX_CAND_ROWS)):
+        vals, mask = step(arrays, qt, ql, w * MAX_CAND_ROWS)
+        hits.append(np.asarray(vals)[0][np.asarray(mask)[0]])
+    got = np.unique(np.concatenate(hits))
+    ref = a[np.isin(a + 1, b)]
+    assert np.array_equal(got, ref)
+    assert len(ref) == len(b)
