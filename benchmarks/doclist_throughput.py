@@ -23,21 +23,23 @@ import numpy as np
 from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data import generate_collection
 from repro.data.queries import sample_traffic
-from repro.serving.engine import BatchedServer, QueryEngine, parse_query
+from repro.serving.plan import parse_query
+from repro.serving.session import Session
 
 BATCH_SIZES = (16, 64, 256)
 MIXES = ("docs", "docs-phrase", "docs-topk")
 
 
-def _occurrences(engine: QueryEngine, q: str) -> int:
+def _occurrences(session: Session, q: str) -> int:
     """Total pattern occurrences behind one docs query (host count)."""
     pq = parse_query(q)
+    pidx = session.positional
     if pq.phrase:
-        return len(engine.phrase(list(pq.terms)))
+        return len(pidx.query_phrase(list(pq.terms)))
     occ = 0
     for t in pq.terms:
-        tid = engine.positional.lookup(t) if engine.positional else None
-        occ += engine.positional.store.list_length(tid) if tid is not None else 0
+        tid = pidx.lookup(t) if pidx else None
+        occ += pidx.store.list_length(tid) if tid is not None else 0
     return occ
 
 
@@ -47,16 +49,10 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
                               words_per_doc=200, seed=seed)
     idx = NonPositionalIndex.build(col.docs, store=store)
     pidx = PositionalIndex.build(col.docs, store=store)
-    # self-indexes serve natively on the host (strategy "self-doclist");
-    # anchoring them would decode every list through locate()
-    from repro.core.registry import FAMILY_SELFINDEX, get_backend_spec
-
-    attach = get_backend_spec(store).family != FAMILY_SELFINDEX
-    engine = QueryEngine(
-        idx, positional=pidx,
-        server=BatchedServer.from_index(idx, probe=probe) if attach else None,
-        positional_server=BatchedServer.from_index(pidx, probe=probe) if attach else None)
-    host = QueryEngine(idx, positional=pidx)
+    # Session.build skips device servers for self-indexes (they serve
+    # natively on the host, strategy "self-doclist")
+    session = Session.build(idx, positional=pidx, probe=probe)
+    host = Session(idx, positional=pidx)
     rng = np.random.default_rng(seed)
 
     words = [w for w in idx.vocab.id_to_token[:300]]
@@ -64,21 +60,21 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
     for mix in MIXES:
         for bs in BATCH_SIZES:
             queries = sample_traffic(mix, bs, col.docs, words, rng)
-            results = engine.batch(queries)  # compile / warm caches
+            results = session.execute(queries)  # compile / warm caches
             t0 = time.perf_counter()
             for _ in range(repeats):
-                engine.batch(queries)
+                session.execute(queries)
             planned_qps = repeats * bs / (time.perf_counter() - t0)
             t0 = time.perf_counter()
-            host.batch(queries)
+            host.execute(queries)
             host_qps = bs / (time.perf_counter() - t0)
             distinct = sum(len(r) for r in results)
             occ = sum(_occurrences(host, q) for q in queries)
             ratio = distinct / max(1, occ)
-            # planner routing per mix: docs/docs-phrase batch on device,
+            # plan routing per mix: docs/docs-phrase batch on device,
             # docs-topk ranks on the host (tf structure) — report the route
             # actually taken so the columns are honest
-            routes = sorted({engine.planner.plan(q).route for q in queries})
+            routes = sorted({session.plan(q).route for q in queries})
             rows.append({"mix": mix, "batch_size": bs, "store": store,
                          "probe": probe, "routes": routes,
                          "planned_qps": round(planned_qps, 1),

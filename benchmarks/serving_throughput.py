@@ -1,10 +1,14 @@
 """Serving throughput: queries/sec for word / AND / phrase traffic mixes
-through the planner-routed batched device path, at batch sizes 16/64/256.
+through the plan-compiled ``Session`` at batch sizes 16/64/256.
 
 The paper's query-time experiments (§5) are per-query microbenchmarks; this
 is the serving-layer complement — padded device batches amortize dispatch
-and the windowed candidate sweep keeps results exact.  Emits a JSON object
-(one entry per (mix, batch_size)) on stdout after the human-readable table.
+and the windowed candidate sweep keeps results exact.  Alongside q/s every
+row reports the **plan-cache hit rate** and the **jit retrace count**
+observed during the timed repeats (both should be 1.0 / 0 on warmed
+traffic — the measurable win of plan caching + width-bucketed batching),
+plus the cumulative session totals.  Emits a JSON object (one entry per
+(mix, batch_size)) on stdout after the human-readable table.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py
     PYTHONPATH=src python benchmarks/serving_throughput.py --store repair_skip --probe vmap
@@ -21,7 +25,7 @@ import numpy as np
 from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data import generate_collection
 from repro.data.queries import sample_traffic
-from repro.serving.engine import BatchedServer, QueryEngine
+from repro.serving.session import Session
 
 BATCH_SIZES = (16, 64, 256)
 MIXES = ("word", "and", "phrase", "mixed")
@@ -33,10 +37,8 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
                               words_per_doc=200, seed=seed)
     idx = NonPositionalIndex.build(col.docs, store=store)
     pidx = PositionalIndex.build(col.docs, store=store)
-    engine = QueryEngine(idx, positional=pidx,
-                         server=BatchedServer.from_index(idx, probe=probe),
-                         positional_server=BatchedServer.from_index(pidx, probe=probe))
-    host = QueryEngine(idx, positional=pidx)
+    session = Session.build(idx, positional=pidx, probe=probe)
+    host = Session(idx, positional=pidx)
     rng = np.random.default_rng(seed)
 
     words = [w for w in idx.vocab.id_to_token[:300]]
@@ -44,19 +46,31 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
     for mix in MIXES:
         for bs in BATCH_SIZES:
             queries = sample_traffic(mix, bs, col.docs, words, rng)
-            engine.batch(queries)  # compile / warm caches
+            session.execute(queries)  # compile plans / trace steps
+            warm = session.metrics()
             t0 = time.perf_counter()
             for _ in range(repeats):
-                engine.batch(queries)
+                session.execute(queries)
             dev_qps = repeats * bs / (time.perf_counter() - t0)
+            m = session.metrics()
+            d_hits = m["plan_cache_hits"] - warm["plan_cache_hits"]
+            d_comp = m["plans_compiled"] - warm["plans_compiled"]
+            d_total = d_hits + d_comp
+            hit_rate = round(d_hits / d_total, 4) if d_total else 1.0
+            retraces = m["jit_traces"] - warm["jit_traces"]
             t0 = time.perf_counter()
-            host.batch(queries)
+            host.execute(queries)
             host_qps = bs / (time.perf_counter() - t0)
             rows.append({"mix": mix, "batch_size": bs, "store": store,
                          "probe": probe, "device_qps": round(dev_qps, 1),
-                         "host_qps": round(host_qps, 1)})
+                         "host_qps": round(host_qps, 1),
+                         "plan_cache_hit_rate": hit_rate,
+                         "jit_retraces": retraces,
+                         "session_plans_compiled": m["plans_compiled"],
+                         "session_jit_traces": m["jit_traces"]})
             print(f"{mix:>6} b={bs:<4} device {dev_qps:9.1f} q/s   "
-                  f"host {host_qps:9.1f} q/s")
+                  f"host {host_qps:9.1f} q/s   plan-cache {hit_rate:.2f}   "
+                  f"retraces {retraces}")
     return rows
 
 

@@ -44,16 +44,19 @@ def main() -> None:
         print("  context:", " ".join(doc_tokens[int(off[0]) - 2 : int(off[0]) + 5]))
 
     # document listing: distinct documents containing a pattern — on a
-    # repetitive collection far fewer docs than occurrences
-    from repro.serving.engine import QueryEngine
+    # repetitive collection far fewer docs than occurrences.  Session is
+    # the one serving entry point (execute + explain).
+    from repro.serving.session import Session
 
-    engine = QueryEngine(idx, positional=pos)
+    session = Session(idx, positional=pos)
     dq = 'docs: "' + " ".join(phrase) + '"'
-    listed = engine.execute(dq)
+    listed = session.execute(dq)
     print(f"\n{dq!r}: {len(hits)} occurrences in {len(listed)} distinct docs "
           f"-> {listed[:10].tolist()}...")
-    top = engine.execute(f"docs-top3: {q[0]} {q[1]}")
+    top = session.execute(f"docs-top3: {q[0]} {q[1]}")
     print(f"docs-top3 for {q}: {top.tolist()} (ranked by term frequency)")
+    print("\nEXPLAIN " + dq)
+    print(session.explain(dq))
 
     # self-indexes answer the same queries through the same API (the
     # backend registry: word/AND/phrase against `store="rlcsa"` etc.)

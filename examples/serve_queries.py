@@ -1,10 +1,11 @@
 """Batched query serving: the paper's compressed index as a service.
 
 Builds the Re-Pair indexes (non-positional + positional), then serves a
-mixed batch of word / AND / phrase / ranked top-k queries two ways — the
-host QueryEngine (paper's sequential skipping) and the device-side anchored
-batched steps routed by the query planner (the TPU-native path, jitted,
-windowed so results are exact) — and checks they agree.
+mixed batch of word / AND / phrase / ranked top-k queries through one
+plan-compiled ``Session`` two ways — host-only (paper's sequential
+skipping) and device-attached (anchored batched steps, jitted, windowed so
+results are exact) — checks they agree, and prints an EXPLAIN plus the
+plan-cache / jit-trace metrics.
 
     PYTHONPATH=src python examples/serve_queries.py
 """
@@ -16,7 +17,7 @@ import numpy as np
 from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data import generate_collection
 from repro.data.queries import sample_traffic
-from repro.serving.engine import BatchedServer, QueryEngine
+from repro.serving.session import Session
 
 
 def main() -> None:
@@ -34,35 +35,40 @@ def main() -> None:
     # word / AND / phrase / topk round-robin over real collection text
     queries = sample_traffic("mixed", 32, col.docs, words, rng, n_terms=2, k=5)
 
-    # host path
-    host = QueryEngine(idx, positional=pidx)
+    # host path: one Session, no device servers
+    host = Session(idx, positional=pidx)
     t0 = time.perf_counter()
-    host_results = host.batch(queries)
+    host_results = host.execute(queries)
     host_ms = 1e3 * (time.perf_counter() - t0)
-    print(f"host engine: 32 mixed queries in {host_ms:.1f} ms")
+    print(f"host session: 32 mixed queries in {host_ms:.1f} ms")
 
-    # device path: anchored arrays + planner-routed batched steps
-    engine = QueryEngine(idx, positional=pidx,
-                         server=BatchedServer.from_index(idx),
-                         positional_server=BatchedServer.from_index(pidx))
-    routes = [engine.planner.plan(q) for q in queries]
-    n_dev = sum(1 for p in routes if p.route == "device")
-    print(f"planner: {n_dev}/32 routed to device "
-          f"({sorted(set(p.strategy for p in routes))})")
-    dev_results = engine.batch(queries)  # compile + serve
+    # device path: anchored arrays + plan-compiled batched buckets
+    session = Session.build(idx, positional=pidx)
+    routes = [session.plan(q) for q in queries]
+    n_dev = sum(1 for rt in routes if rt.route == "device")
+    print(f"plan compiler: {n_dev}/32 routed to device "
+          f"({sorted(set(rt.strategy for rt in routes))})")
+    dev_results = session.execute(queries)  # compile + serve
     t0 = time.perf_counter()
-    dev_results = engine.batch(queries)
+    dev_results = session.execute(queries)
     dev_ms = 1e3 * (time.perf_counter() - t0)
     print(f"device (anchored, jitted, windowed): 32 mixed queries in {dev_ms:.1f} ms")
+    m = session.metrics()
+    print(f"plan cache hit rate {m['plan_cache_hit_rate']:.2f} "
+          f"({m['plans_compiled']} plans for {m['queries_executed']} queries), "
+          f"jit traces {m['jit_traces']}")
 
     # exact agreement (no candidate cap: windows cover full lists)
     agree = sum(1 for h, d in zip(host_results, dev_results)
                 if np.array_equal(np.asarray(h), np.asarray(d)))
     print(f"host/device agreement: {agree}/32 queries")
 
-    # phrase answers translate to (doc, offset) pairs
+    # EXPLAIN: the costed physical operator tree of one phrase query
     pq = next(q for q in queries if q.startswith('"'))
-    pos = engine.batch([pq])[0]
+    print("\n" + session.explain(pq) + "\n")
+
+    # phrase answers translate to (doc, offset) pairs
+    pos = session.execute([pq])[0]
     docs, offs = pidx.positions_to_docs(np.asarray(pos))
     print(f"phrase {pq}: {len(pos)} occurrences, first at "
           f"doc {docs[0] if len(docs) else '-'} offset {offs[0] if len(offs) else '-'}")

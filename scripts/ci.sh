@@ -22,4 +22,9 @@ python -m pytest -x -q tests/test_differential.py
 echo "== smoke: registry + engine + example (fast pytest subset) =="
 sh scripts/smoke.sh -k "registry or codecs or doclist"
 
+echo "== explain CLI: physical plans against one backend per family =="
+python scripts/explain.py "top5: alpha beta" --store repair_skip
+python scripts/explain.py --sample docs-phrase --store rlcsa --json
+python scripts/explain.py --operators
+
 echo "ci OK"

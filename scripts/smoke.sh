@@ -16,31 +16,33 @@ python -m pytest -x -q "$@"
 echo "== backend registry =="
 python scripts/list_backends.py
 
-echo "== unified engine: one backend per family, mixed query batch =="
+echo "== unified Session: one backend per family, mixed query batch =="
 python - <<'EOF'
 import numpy as np
 from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data import generate_collection
 from repro.data.text import tokenize
-from repro.serving.engine import QueryEngine
+from repro.serving.session import Session
 
 col = generate_collection(n_articles=3, versions_per_article=5,
                           words_per_doc=60, seed=7)
 ph = tokenize(col.docs[0])[2:4]
-engines = {}
+sessions = {}
 for store in ("repair_skip", "rlcsa"):  # one inverted, one self-index
-    engines[store] = QueryEngine(
+    sessions[store] = Session(
         NonPositionalIndex.build(col.docs, store=store),
         positional=PositionalIndex.build(col.docs, store=store))
-words = [w for w in engines["repair_skip"].index.vocab.id_to_token[:12]]
+words = [w for w in sessions["repair_skip"].index.vocab.id_to_token[:12]]
 batch = [words[1], f"{words[1]} {words[4]}", '"' + " ".join(ph) + '"',
          f"docs: {words[1]} {words[4]}", 'docs: "' + " ".join(ph) + '"']
-results = {s: e.batch(batch) for s, e in engines.items()}
+results = {s: sess.execute(batch) for s, sess in sessions.items()}
 for q, a, b in zip(batch, results["repair_skip"], results["rlcsa"]):
     assert np.array_equal(np.sort(np.asarray(a)), np.sort(np.asarray(b))), q
-    plan = engines["rlcsa"].planner.plan(q)
+    rt = sessions["rlcsa"].plan(q)
     print(f"  {q!r:32s} -> {len(np.asarray(a)):3d} hits "
-          f"(rlcsa strategy: {plan.strategy})")
+          f"(rlcsa strategy: {rt.strategy})")
+m = sessions["rlcsa"].metrics()
+assert m["plans_compiled"] <= len(batch), m
 print("inverted/self-index answers agree on the mixed batch")
 EOF
 

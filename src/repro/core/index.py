@@ -71,8 +71,50 @@ STORE_BUILDERS = _LegacyStoreBuilders()
 
 
 # ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class IndexStats:
+    """Aggregate index statistics — the cost signal of the query-plan
+    compiler (``serving.plan``): list lengths bound candidate counts,
+    ``universe_size`` is the selectivity denominator."""
+
+    n_lists: int
+    n_postings: int
+    universe_size: int
+    avg_list_length: float
+    max_list_length: int
+
+
+def _compute_stats(store, universe: int) -> IndexStats:
+    lengths = [store.list_length(i) for i in range(store.n_lists)]
+    total = int(sum(lengths))
+    return IndexStats(
+        n_lists=store.n_lists, n_postings=total, universe_size=int(universe),
+        avg_list_length=round(total / max(1, store.n_lists), 2),
+        max_list_length=int(max(lengths, default=0)))
+
+
+class _StatsMixin:
+    """Shared stats surface (both index classes expose ``lookup`` /
+    ``universe_size`` / ``store``)."""
+
+    def stats(self) -> IndexStats:
+        """Aggregate statistics (computed once, cached)."""
+        cached = self.__dict__.get("_stats")
+        if cached is None:
+            cached = _compute_stats(self.store, self.universe_size)
+            self.__dict__["_stats"] = cached
+        return cached
+
+    def term_length(self, term: str) -> int:
+        """Posting-list length of ``term`` (0 when out of vocabulary) —
+        the per-term cost-model input."""
+        tid = self.lookup(term)
+        return 0 if tid is None else int(self.store.list_length(tid))
+
+
+# ----------------------------------------------------------------------
 @dataclass
-class NonPositionalIndex:
+class NonPositionalIndex(_StatsMixin):
     vocab: Vocabulary
     store: object  # any SearchBackend
     n_docs: int
@@ -156,7 +198,7 @@ DOC_SEP = "\x00"
 
 
 @dataclass
-class PositionalIndex:
+class PositionalIndex(_StatsMixin):
     vocab: Vocabulary
     store: object  # any SearchBackend
     doc_starts: np.ndarray  # word offset where each document begins in D

@@ -246,3 +246,71 @@ def build_backend(name: str, source: "BuildSource | list[np.ndarray]", **store_k
 def capabilities_of(backend) -> frozenset[str]:
     """The backend's declared capability set (empty when undeclared)."""
     return getattr(backend, "capabilities", frozenset())
+
+
+# ----------------------------------------------------------------------
+# capability → physical operator mapping (the plan compiler's vocabulary)
+# ----------------------------------------------------------------------
+OP_SELF_LOCATE = "self-locate"
+OP_COMPRESSED_SKIP = "compressed-skip"
+OP_SAMPLED_SEEK = "sampled-seek"
+OP_SVS_MERGE = "svs-merge"
+OP_DEVICE_SWEEP = "device-windowed-sweep"
+OP_SELF_DOCLIST = "self-doclist"
+OP_GRAMMAR_DOCLIST = "grammar-doclist"
+OP_DOC_RUNS = "doc-runs"
+OP_REDUCE_DOCLIST = "reduce-doclist"
+
+#: physical operator → (capability requirement, one-line description); the
+#: matrix ``serving.plan`` lowers through (also rendered by scripts/explain.py)
+PHYSICAL_OPERATORS = {
+    OP_SELF_LOCATE: ("shifted_intersect",
+                     "one native locate answers the whole pattern (self-indexes)"),
+    OP_SAMPLED_SEEK: ("intersect_candidates + seek",
+                      "compressed-domain candidate probes starting at samples"),
+    OP_COMPRESSED_SKIP: ("intersect_candidates",
+                         "compressed-domain candidate probes from the list head"),
+    OP_SVS_MERGE: ("(fallback)", "decode lists, galloping set-vs-set merge"),
+    OP_DEVICE_SWEEP: ("device server attached",
+                      "anchored binary-search probes, windowed-exact, jitted"),
+    OP_SELF_DOCLIST: ("shifted_intersect",
+                      "whole-pattern locate, positions reduced to documents"),
+    OP_GRAMMAR_DOCLIST: ("doc_list",
+                         "grammar phrase-sum walk; in-document phrases stay unexpanded"),
+    OP_DOC_RUNS: ("(fallback, single term)",
+                  "ILCP-style per-term (doc, tf) run structure"),
+    OP_REDUCE_DOCLIST: ("(fallback, multi-term)",
+                        "shifted/run intersection, then reduce to documents"),
+}
+
+
+def intersect_operator(caps: frozenset[str]) -> str:
+    """The host intersection operator a capability set selects.
+
+    Self-indexes locate whole patterns natively; ``intersect_candidates``
+    backends intersect in the compressed domain (with or without sampled
+    seeks); everything else decodes and merges.
+    """
+    if CAP_SHIFTED_INTERSECT in caps:
+        return OP_SELF_LOCATE
+    if CAP_INTERSECT_CANDIDATES in caps:
+        return OP_SAMPLED_SEEK if CAP_SEEK in caps else OP_COMPRESSED_SKIP
+    return OP_SVS_MERGE
+
+
+def doclist_operator(caps: frozenset[str], positional: bool, n_terms: int) -> str:
+    """The host document-listing operator (``docs:`` / ``docs-top<k>:``).
+
+    On the positional index, self-indexes reduce one whole-pattern locate;
+    single-term patterns use the grammar walk (``doc_list`` capability) or
+    the run structure; conjunctions intersect per-term document runs.  On
+    the non-positional index the postings *are* doc ids, so the listing is
+    the store's own intersection path.
+    """
+    if positional:
+        if CAP_SHIFTED_INTERSECT in caps:
+            return OP_SELF_DOCLIST
+        if n_terms == 1:
+            return OP_GRAMMAR_DOCLIST if CAP_DOC_LIST in caps else OP_DOC_RUNS
+        return OP_REDUCE_DOCLIST
+    return "doclist+" + intersect_operator(caps)

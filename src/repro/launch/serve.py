@@ -1,11 +1,12 @@
 """Serving driver: build the compressed indexes over a collection and serve
-batched word / AND / phrase / top-k / document-listing traffic through the
-query planner (host engine + jitted anchored device paths, windowed-exact).
+batched word / AND / phrase / top-k / document-listing traffic through one
+plan-compiled :class:`~repro.serving.session.Session` (host operators +
+jitted anchored device paths, windowed-exact, plan-cached).
 
     PYTHONPATH=src python -m repro.launch.serve --articles 10 --queries 64
     PYTHONPATH=src python -m repro.launch.serve --mode phrase --terms 3
     PYTHONPATH=src python -m repro.launch.serve --mode mixed --probe kernel
-    PYTHONPATH=src python -m repro.launch.serve --mode docs-phrase
+    PYTHONPATH=src python -m repro.launch.serve --mode docs-phrase --explain
 """
 
 from __future__ import annotations
@@ -16,10 +17,10 @@ import time
 import numpy as np
 
 from ..core.index import NonPositionalIndex, PositionalIndex
-from ..core.registry import FAMILY_SELFINDEX, backend_names, get_backend_spec
+from ..core.registry import backend_names, get_backend_spec
 from ..data import generate_collection
 from ..data.queries import sample_traffic
-from ..serving.engine import BatchedServer, QueryEngine
+from ..serving.session import Session
 
 
 def main() -> None:
@@ -35,6 +36,8 @@ def main() -> None:
                     choices=["and", "phrase", "topk", "docs", "docs-phrase",
                              "docs-topk", "mixed"])
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
+    ap.add_argument("--explain", action="store_true",
+                    help="print the physical plan of one query per distinct shape")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,41 +60,51 @@ def main() -> None:
         print(f"built {args.store} positional index ({100 * pidx.space_fraction:.3f}% "
               f"of collection) in {time.perf_counter()-t0:.2f}s")
 
-    # self-indexes serve natively on the host (planner strategy "self-locate");
-    # anchoring them onto the device would decode every list through locate()
-    attach_device = spec.family != FAMILY_SELFINDEX
-    engine = QueryEngine(
-        idx, positional=pidx,
-        server=BatchedServer.from_index(idx, probe=args.probe) if attach_device else None,
-        positional_server=(BatchedServer.from_index(pidx, probe=args.probe)
-                           if pidx is not None and attach_device else None))
+    # Session.build attaches device servers except for self-indexes (their
+    # native locate serves whole patterns on the host)
+    session = Session.build(idx, positional=pidx, probe=args.probe)
 
     rng = np.random.default_rng(args.seed)
     words = [w for w in idx.vocab.id_to_token[:300]]
     queries = sample_traffic(args.mode, args.queries, col.docs, words, rng,
                              n_terms=args.terms)
-    plans = [engine.planner.plan(q) for q in queries]
     by_route: dict[str, int] = {}
-    for p in plans:
-        by_route[f"{p.route}:{p.strategy}"] = by_route.get(f"{p.route}:{p.strategy}", 0) + 1
+    for q in queries:
+        rt = session.plan(q)
+        by_route[f"{rt.route}:{rt.strategy}"] = by_route.get(f"{rt.route}:{rt.strategy}", 0) + 1
     print(f"planner: {by_route}")
+    if args.explain:
+        seen = set()
+        for q in queries:
+            rt = session.plan(q)
+            if rt.strategy not in seen:
+                seen.add(rt.strategy)
+                print("\n" + session.explain(q))
+        print()
 
-    # host-only baseline
-    host_engine = QueryEngine(idx, positional=pidx)
+    # host-only baseline (no device servers, same plan compiler)
+    host_session = Session(idx, positional=pidx)
     t0 = time.perf_counter()
-    host_results = host_engine.batch(queries)
+    host_results = host_session.execute(queries)
     dt = time.perf_counter() - t0
     n_hits = sum(len(r) for r in host_results)
-    print(f"host engine: {args.queries} queries, {n_hits} hits, "
+    print(f"host session: {args.queries} queries, {n_hits} hits, "
           f"{1e3 * dt / args.queries:.2f} ms/query ({args.queries / dt:.0f} q/s)")
 
     # planned path (device batches, windowed exact) — warm up then time
-    results = engine.batch(queries)
+    results = session.execute(queries)
+    warm = session.metrics()
     t0 = time.perf_counter()
-    results = engine.batch(queries)
+    results = session.execute(queries)
     dt = time.perf_counter() - t0
     print(f"planned batched path: {1e3 * dt / args.queries:.2f} ms/query "
           f"({args.queries / dt:.0f} q/s)")
+    m = session.metrics()
+    print(f"plan cache: {m['plan_cache_hits']} hits / {m['plans_compiled']} compiles "
+          f"(hit rate {m['plan_cache_hit_rate']:.2f}); jit traces {m['jit_traces']} "
+          f"({m['jit_traces'] - warm['jit_traces']} new, "
+          f"{m['plans_compiled'] - warm['plans_compiled']} re-plans "
+          f"on the repeated batch)")
 
     agree = sum(1 for h, d in zip(host_results, results)
                 if np.array_equal(np.asarray(h), np.asarray(d)))

@@ -1,37 +1,31 @@
-"""Batched query serving over the anchored compressed index.
+"""Batched device serving + legacy engine shims.
 
-Three tiers:
+The serving stack is now plan-first (PR 4):
 
-* :class:`QueryEngine` — host-facing service: executes word / AND / phrase /
-  ranked top-k / document-listing (``docs:`` / ``docs-top<k>:``) queries
-  against built indexes (any list store) with the best intersection path per
-  store; used by the examples and benchmarks.
+* ``serving.plan`` — `parse_query` → logical plan → cost-aware compiler →
+  physical plan (`route_query` / `compile_query` / EXPLAIN rendering).
+* ``serving.session.Session`` — the **only** entry point: plan-cached,
+  jit-bucket-grouped `execute`, plus `explain` and `metrics`.
+* this module — the device-side batched steps (:func:`make_serve_step`),
+  the windowed-exact device driver (:class:`BatchedServer`), and thin
+  **deprecation shims** (:class:`QueryEngine`, :class:`QueryPlanner`) that
+  keep the old per-kind call sites working for one PR.
 
-* The **query planner** (:func:`parse_query`, :class:`QueryPlanner`) —
-  classifies each query (single-word / conjunctive / phrase / ranked top-k /
-  doc listing), picks the index it must run against (phrase and phrase
-  doc-listing → positional, §5.2; the rest → non-positional, §5.1) and the
-  best execution path for the store backing that index (Re-Pair skipping,
-  sampled seek, merge/SVS on decoded lists, the doc-run / grammar listing
-  structures of ``core.doclist``, or the batched device path when anchored
-  arrays are resident).
-
-* The device-side batched steps (:func:`make_serve_step`,
-  :class:`BatchedServer`) — padded (batch, max_terms) term-id matrices; each
-  step generates candidates from the query's first list via the bounded
-  expansion table and probes the remaining terms through the anchored binary
-  search (``member_batch``).  Phrase queries probe *shifted* candidates
-  (offset-shifted intersection, paper §3): term ``t`` of a phrase must hold
-  ``position + t``.  Candidate generation is **windowed**: instead of a hard
-  64-candidate truncation, the host driver sweeps ``row_start`` over the
-  driving list's C-entries so arbitrarily long lists are served exactly.
-  Ranked top-k computes the idf-proxy weights of :meth:`QueryEngine.ranked_and`
-  on device and reduces with ``lax.top_k`` inside the step.
+Device-step geometry: padded (batch, width) term-id matrices; each step
+generates candidates from the query's first list via the bounded expansion
+table and probes the remaining terms through the anchored binary search
+(``member_batch``).  Phrase queries probe *shifted* candidates
+(offset-shifted intersection, paper §3): term ``t`` of a phrase must hold
+``position + t``.  Candidate generation is **windowed**: the host driver
+sweeps ``row_start`` over the driving list's C-entries so arbitrarily long
+lists are served exactly.  Ranked top-k computes idf-proxy weights on
+device and reduces with ``lax.top_k``; document listing maps matches to
+doc ids and dedups on device with a segment-max scan.
 """
 
 from __future__ import annotations
 
-import re
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -39,186 +33,74 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.anchors import AnchoredIndex, build_anchored, member_batch
-from ..core.doclist import (
-    DocRunIndex,
-    doc_list_terms,
-    positions_to_doc_counts,
-    positions_to_docs,
-    rank_docs,
-)
 from ..core.index import NonPositionalIndex, PositionalIndex
-from ..core.registry import (
-    CAP_DEVICE_RESIDENT,
-    CAP_DOC_LIST,
-    CAP_INTERSECT_CANDIDATES,
-    CAP_SEEK,
-    CAP_SHIFTED_INTERSECT,
-    capabilities_of,
+from ..core.registry import CAP_DEVICE_RESIDENT, capabilities_of
+from .plan import (  # noqa: F401  (re-exported: the legacy import surface)
+    AND,
+    DOCS,
+    DOCS_TOPK,
+    MAX_CAND_ROWS,
+    PHRASE,
+    SERVER_KINDS,
+    TOPK,
+    WORD,
+    ParsedQuery,
+    parse_query,
+    route_query,
+    width_bucket,
 )
-
-MAX_CAND_ROWS = 64  # candidate C-entries taken from the driving list per window
-
-# query kinds
-WORD = "word"
-AND = "and"
-PHRASE = "phrase"
-TOPK = "topk"
-DOCS = "docs"
-DOCS_TOPK = "docs_topk"
-
-_TOPK_RE = re.compile(r"^top(\d+):\s*(.+)$")
-_DOCS_RE = re.compile(r"^docs(?:-top(\d+))?:\s*(.+)$")
-
-
-@dataclass(frozen=True)
-class ParsedQuery:
-    """A classified query: ``kind`` in {word, and, phrase, topk, docs,
-    docs_topk}.  ``phrase`` marks doc-listing queries whose terms form a
-    contiguous phrase (``docs: "a b"``) rather than a conjunction."""
-
-    kind: str
-    terms: tuple[str, ...]
-    k: int = 0
-    phrase: bool = False
-
-
-def parse_query(q) -> ParsedQuery:
-    """Classify a raw query.
-
-    * ``list[str]`` — legacy batch form: one word → word, several → AND;
-    * ``"w"`` — single word;
-    * ``"w1 w2 ..."`` — conjunctive (AND);
-    * ``'"w1 w2 ..."'`` (quoted) — phrase;
-    * ``"top<k>: w1 w2"`` — ranked AND, top-k by idf proxy;
-    * ``"docs: w1 w2"`` / ``'docs: "w1 w2"'`` — document listing: distinct
-      docs containing all words (resp. the exact phrase);
-    * ``"docs-top<k>: ..."`` — ranked document retrieval: top-k docs by
-      pattern frequency.
-    """
-    if isinstance(q, ParsedQuery):
-        return q
-    if isinstance(q, (list, tuple)):
-        terms = tuple(q)
-        return ParsedQuery(WORD if len(terms) == 1 else AND, terms)
-    s = q.strip()
-    m = _DOCS_RE.match(s)
-    if m:
-        body = m.group(2).strip()
-        phrase = len(body) >= 2 and body[0] == '"' and body[-1] == '"'
-        terms = tuple((body[1:-1] if phrase else body).split())
-        if m.group(1) is None:
-            return ParsedQuery(DOCS, terms, phrase=phrase)
-        return ParsedQuery(DOCS_TOPK, terms, k=int(m.group(1)), phrase=phrase)
-    m = _TOPK_RE.match(s)
-    if m:
-        return ParsedQuery(TOPK, tuple(m.group(2).split()), k=int(m.group(1)))
-    if len(s) >= 2 and s[0] == '"' and s[-1] == '"':
-        return ParsedQuery(PHRASE, tuple(s[1:-1].split()))
-    terms = tuple(s.split())
-    return ParsedQuery(WORD if len(terms) == 1 else AND, terms)
+from .session import Session
 
 
 @dataclass(frozen=True)
 class QueryPlan:
+    """Legacy plan record (the pre-IR surface): see ``serving.plan.Route``
+    and ``Session.explain`` for the first-class replacement."""
+
     query: ParsedQuery
     index: str  # "nonpositional" | "positional"
     route: str  # "host" | "device"
-    strategy: str  # host intersection path or device step name
-
-
-def _host_strategy(store) -> str:
-    """Name the host intersection path a backend's capabilities select.
-
-    Dispatch is purely capability-driven (no store types): self-indexes
-    locate whole patterns natively; ``intersect_candidates`` backends
-    intersect in the compressed domain (with or without sampled seeks);
-    everything else decodes and merges.
-    """
-    caps = capabilities_of(store)
-    if CAP_SHIFTED_INTERSECT in caps:
-        return "self-locate"
-    if CAP_INTERSECT_CANDIDATES in caps:
-        return "sampled-seek" if CAP_SEEK in caps else "compressed-skip"
-    return "svs-merge"
-
-
-def _doclist_strategy(index_name: str, store, pq: "ParsedQuery") -> str:
-    """Name the host document-listing path (capability-selected, like
-    :func:`_host_strategy` but for the ``docs`` / ``docs-topk`` kinds)."""
-    caps = capabilities_of(store)
-    if index_name == "positional":
-        if CAP_SHIFTED_INTERSECT in caps:
-            return "self-doclist"  # one whole-pattern locate, then reduce
-        if len(pq.terms) == 1:
-            # single-term listing via the run structure; grammar stores walk
-            # phrase sums without expanding within-document phrases
-            return "grammar-doclist" if CAP_DOC_LIST in caps else "doc-runs"
-        return "reduce-doclist"  # shifted intersect / run intersect + reduce
-    # non-positional postings are doc ids already: the conjunctive path is
-    # the listing, so the strategy is the store's intersection path
-    return "doclist+" + _host_strategy(store)
+    strategy: str  # host physical operator or device step name
 
 
 class QueryPlanner:
-    """Routes parsed queries to the best execution path.
-
-    Phrase queries need the positional index; everything else runs on the
-    non-positional one.  Multi-term queries go to the device path when a
-    :class:`BatchedServer` is attached for that index (anchored arrays
-    resident on device); single words and unknown-term queries stay on the
-    host (a word query is a pure list decode — no intersection to batch).
-    Self-index backends serve through the host route: their native
-    ``locate`` answers the whole pattern at once (strategy "self-locate"),
-    so there is no per-term probe loop to batch onto the device.
-    """
+    """Deprecated routing shim: ``plan`` wraps the plan compiler's
+    :func:`repro.serving.plan.route_query` decision into the legacy
+    :class:`QueryPlan` record.  Use ``Session.explain`` / ``Session.plan``."""
 
     def __init__(self, engine: "QueryEngine"):
         self.engine = engine
 
     def plan(self, q, prefer_device: bool = True) -> QueryPlan:
         pq = parse_query(q)
-        needs_positional = pq.kind == PHRASE or (
-            pq.kind in (DOCS, DOCS_TOPK)
-            and (pq.phrase or self.engine.index is None))
-        if needs_positional:
-            index_name, idx, server = "positional", self.engine.positional, self.engine.positional_server
-        else:
-            index_name, idx, server = "nonpositional", self.engine.index, self.engine.server
-        if idx is None:
-            raise ValueError(f"{pq.kind} query requires the {index_name} index")
-        # single-word reads are a pure list decode — nothing to batch — except
-        # phrase doc listing, where the device dedup collapses occurrences
-        multi_ok = len(pq.terms) > 1 or (pq.kind == DOCS and pq.phrase)
-        # non-phrase doc listing on the positional index (positional-only
-        # engines) intersects per-term *document runs*, not positions — the
-        # device AND step would intersect disjoint position lists
-        doc_route_ok = (pq.kind not in (DOCS, DOCS_TOPK)
-                        or pq.phrase or index_name == "nonpositional")
-        device_ok = (
-            prefer_device
-            and server is not None
-            and pq.kind != DOCS_TOPK  # ranking needs the host tf structure
-            and multi_ok
-            and doc_route_ok
-            and all(_lookup(idx, t) is not None for t in pq.terms)
-        )
-        if device_ok:
-            return QueryPlan(pq, index_name, "device", f"anchored-{pq.kind}")
-        if pq.kind in (DOCS, DOCS_TOPK):
-            return QueryPlan(pq, index_name, "host",
-                             _doclist_strategy(index_name, idx.store, pq))
-        return QueryPlan(pq, index_name, "host", _host_strategy(idx.store))
-
-
-def _lookup(index, term: str):
-    return index.lookup(term)
+        rt = route_query(self.engine, pq, prefer_device=prefer_device)
+        return QueryPlan(pq, rt.index, rt.route, rt.strategy)
 
 
 # ----------------------------------------------------------------------
-# host engine
+# legacy host engine (deprecation shim over Session)
 # ----------------------------------------------------------------------
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated(method: str) -> None:
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            f"QueryEngine.{method} (and the other per-kind QueryEngine "
+            f"methods) are deprecated: build a repro.serving.session.Session "
+            f"and go through Session.execute / Session.explain",
+            DeprecationWarning, stacklevel=3)
+
+
 @dataclass
 class QueryEngine:
+    """Deprecated facade: every call delegates to an owned
+    :class:`~repro.serving.session.Session` (``.session``).  ``execute`` /
+    ``batch`` stay silent for migration; the per-kind methods emit one
+    ``DeprecationWarning`` per process."""
+
     # a positional-only engine (index=None) still serves phrase and document
     # listing queries through the doc-run / grammar structures
     index: NonPositionalIndex | None
@@ -227,149 +109,97 @@ class QueryEngine:
     positional_server: "BatchedServer | None" = None  # device path over `positional`
 
     def __post_init__(self):
+        self.session = Session(index=self.index, positional=self.positional,
+                               server=self.server,
+                               positional_server=self.positional_server)
         self.planner = QueryPlanner(self)
-        self._doc_run_index: DocRunIndex | None = None
 
-    def word(self, w: str) -> np.ndarray:
-        if self.index is None:
-            raise ValueError("word queries require the nonpositional index")
-        return np.asarray(self.index.query_word(w))
-
-    def conjunctive(self, words: list[str]) -> np.ndarray:
-        if self.index is None:
-            raise ValueError("AND queries require the nonpositional index")
-        return np.asarray(self.index.query_and(words))
-
-    def phrase(self, tokens: list[str]) -> np.ndarray:
-        """Positions of the first token of each phrase occurrence (§5.2)."""
-        if self.positional is None:
-            raise ValueError("phrase queries require a PositionalIndex")
-        return np.asarray(self.positional.query_phrase(list(tokens)))
-
-    def ranked_and(self, words: list[str], k: int = 10) -> np.ndarray:
-        """Google-style ranked AND: intersect, then rank by term frequency
-        proxy (shorter lists = rarer terms weigh more)."""
-        docs = self.conjunctive(words)
-        if len(docs) == 0:
-            return docs
-        weights = np.zeros(len(docs))
-        for w in words:
-            wid = self.index.word_id(w)
-            if wid is None:
-                continue
-            ell = max(1, self.index.store.list_length(wid))
-            weights += np.log1p(self.index.n_docs / ell)
-        order = np.argsort(-weights, kind="stable")
-        return docs[order][:k]
-
-    # -- document listing (the docs: / docs-top<k>: workload) -----------
-    def doc_runs(self) -> DocRunIndex:
-        """The ILCP-style per-term document-run structure over the
-        positional store (built lazily, cached; see ``core.doclist``)."""
-        if self.positional is None:
-            raise ValueError("the doc-run structure requires the PositionalIndex")
-        if self._doc_run_index is None:
-            self._doc_run_index = DocRunIndex(self.positional.store,
-                                              self.positional.doc_starts)
-        return self._doc_run_index
-
-    def doc_list(self, terms: list[str], phrase: bool = False) -> np.ndarray:
-        """Distinct (sorted) doc ids containing all ``terms`` (``phrase`` —
-        containing the exact phrase).  Phrase listing runs on the positional
-        index: the pattern's positions reduce to documents through the
-        doc-boundary array, with the run / grammar fast paths for
-        single-term patterns.  Word listing uses the non-positional index
-        when present (its postings *are* doc ids) and falls back to
-        intersecting per-term document runs for positional-only engines."""
-        terms = list(terms)
-        if not terms:
-            return np.zeros(0, dtype=np.int64)
-        if phrase or self.index is None:
-            if self.positional is None:
-                raise ValueError("phrase document listing requires the PositionalIndex")
-            ids = [self.positional.lookup(t) for t in terms]
-            if any(i is None for i in ids):
-                return np.zeros(0, dtype=np.int64)
-            if phrase and len(terms) > 1:
-                return positions_to_docs(self.phrase(terms),
-                                         self.positional.doc_starts)
-            # single token, or positional-only conjunction: per-term runs
-            return doc_list_terms(self.doc_runs(), ids)
-        docs = self.conjunctive(terms) if len(terms) > 1 else self.word(terms[0])
-        return positions_to_docs(docs, None)
-
-    def doc_topk(self, terms: list[str], k: int = 10, phrase: bool = False) -> np.ndarray:
-        """Ranked document retrieval: top-``k`` docs by pattern frequency
-        (phrase occurrences, or summed term frequencies for conjunctions),
-        ties broken by lowest doc id.  Frequencies come from the positional
-        doc-run structure; without a positional index every document counts
-        once and the ranking degenerates to doc-id order."""
-        terms = list(terms)
-        docs = self.doc_list(terms, phrase=phrase)
-        if len(docs) == 0:
-            return docs
-        k = k or 10
-        if self.positional is None:
-            return docs[:k]
-        if phrase and len(terms) > 1:
-            pdocs, counts = positions_to_doc_counts(self.phrase(terms),
-                                                    self.positional.doc_starts)
-            return rank_docs(pdocs, counts, k)
-        runs = self.doc_runs()
-        scores = np.zeros(len(docs), dtype=np.int64)
-        for t in terms:
-            tid = self.positional.lookup(t)
-            if tid is not None:
-                scores += runs.term_frequencies(tid, docs)
-        return rank_docs(docs, scores, k)
+    def __setattr__(self, name, value):
+        # keep the owned Session live: old call sites attach servers (or swap
+        # indexes) after construction, and routes planned under the previous
+        # configuration must not be served from the cache
+        object.__setattr__(self, name, value)
+        if (name in ("index", "positional", "server", "positional_server")
+                and getattr(self, "session", None) is not None):
+            setattr(self.session, name, value)
+            self.session._plan_cache.clear()
 
     def execute(self, q) -> np.ndarray:
-        """Plan and run one query (host path; device batches go through
-        :meth:`batch`, which groups by kind first)."""
-        pq = parse_query(q)
-        if not pq.terms:  # e.g. '""' or "" — nothing to match
-            return np.zeros(0, dtype=np.int64)
-        if pq.kind == WORD:
-            return self.word(pq.terms[0])
-        if pq.kind == AND:
-            return self.conjunctive(list(pq.terms))
-        if pq.kind == PHRASE:
-            return self.phrase(list(pq.terms))
-        if pq.kind == TOPK:
-            return self.ranked_and(list(pq.terms), k=pq.k or 10)
-        if pq.kind == DOCS:
-            return self.doc_list(list(pq.terms), phrase=pq.phrase)
-        if pq.kind == DOCS_TOPK:
-            return self.doc_topk(list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
-        raise ValueError(pq.kind)
+        """Plan and run one query (a list of words is the legacy AND form)."""
+        return self.session.execute(parse_query(q))
 
     def batch(self, queries: list) -> list[np.ndarray]:
-        """Serve a mixed batch: plan every query, group device-routed ones
-        by kind into padded device batches, run host queries one by one,
-        and return results in the original order."""
-        plans = [self.planner.plan(q) for q in queries]
-        out: list[np.ndarray | None] = [None] * len(queries)
-        groups: dict[tuple, list[int]] = {}
-        for i, pl in enumerate(plans):
-            if pl.route == "device":
-                key = (pl.index, pl.query.kind, pl.query.k, pl.query.phrase)
-                groups.setdefault(key, []).append(i)
-            else:
-                out[i] = self.execute(pl.query)
-        for (index_name, kind, k, phrase), idxs in groups.items():
-            server = self.server if index_name == "nonpositional" else self.positional_server
-            sub = [plans[i].query for i in idxs]
-            if kind == TOPK:
-                res = server.topk([list(p.terms) for p in sub], k=k or 10)
-            elif kind == DOCS:
-                res = server.doclist([list(p.terms) for p in sub], phrase=phrase)
-            elif kind == PHRASE:
-                res = server.phrase([list(p.terms) for p in sub])
-            else:
-                res = server.conjunctive([list(p.terms) for p in sub])
-            for i, r in zip(idxs, res):
-                out[i] = r
-        return out
+        """Serve a mixed batch in original order (see ``Session.execute``)."""
+        return self.session.execute(list(queries))
+
+    def doc_runs(self):
+        return self.session.doc_runs()
+
+    # -- deprecated per-kind surface ------------------------------------
+    def word(self, w: str) -> np.ndarray:
+        _warn_deprecated("word")
+        return self.session._word(w)
+
+    def conjunctive(self, words: list[str]) -> np.ndarray:
+        _warn_deprecated("conjunctive")
+        return self.session._conjunctive(words)
+
+    and_ = conjunctive
+
+    def phrase(self, tokens: list[str]) -> np.ndarray:
+        _warn_deprecated("phrase")
+        return self.session._phrase(tokens)
+
+    def ranked_and(self, words: list[str], k: int = 10) -> np.ndarray:
+        _warn_deprecated("ranked_and")
+        return self.session._ranked_and(words, k=k)
+
+    topk = ranked_and
+
+    def doc_list(self, terms: list[str], phrase: bool = False) -> np.ndarray:
+        _warn_deprecated("doc_list")
+        return self.session._doc_list(terms, phrase=phrase)
+
+    def doc_topk(self, terms: list[str], k: int = 10, phrase: bool = False) -> np.ndarray:
+        _warn_deprecated("doc_topk")
+        return self.session._doc_topk(terms, k=k, phrase=phrase)
+
+
+def _lookup(index, term: str):
+    return index.lookup(term)
+
+
+def encode_queries(host_index, lengths: np.ndarray, queries: list[list[str]],
+                   sort_by_length: bool = False, width: int | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad term lists to (B, width) id matrices — the shared encode step of
+    every batched device driver (``BatchedServer``, ``PartitionedServer``).
+
+    ``width`` defaults to the batch's longest query; the Session passes its
+    power-of-two bucket so equal shapes share jit traces.  Queries with any
+    unknown term are marked invalid (their result is empty; the padded row
+    still flows through the step so shapes stay static).  With
+    ``sort_by_length`` (AND / top-k only — order matters for phrases) the
+    rarest term under ``lengths`` drives candidate generation, which
+    minimizes the window sweep."""
+    longest = max(len(q) for q in queries)
+    if width is None:
+        width = max(2, longest)
+    elif width < longest:
+        raise ValueError(f"width {width} < longest query ({longest} terms)")
+    qt = np.zeros((len(queries), width), np.int32)
+    ql = np.ones(len(queries), np.int32)
+    ok = np.ones(len(queries), bool)
+    for i, q in enumerate(queries):
+        ids = [_lookup(host_index, t) for t in q]
+        if any(v is None for v in ids):
+            ok[i] = False
+            continue
+        if sort_by_length:
+            ids = sorted(ids, key=lambda w: lengths[w])
+        qt[i, : len(ids)] = ids
+        ql[i] = len(ids)
+    return qt, ql, ok
 
 
 # ----------------------------------------------------------------------
@@ -517,13 +347,22 @@ def make_uihrdc_serve_step(max_terms: int = 8):
 class BatchedServer:
     """Owns the device-resident anchored arrays for one index plus a cache
     of jitted steps, and drives the candidate-window sweep so results are
-    exact for lists of any length (no 64-candidate truncation)."""
+    exact for lists of any length (no 64-candidate truncation).
+
+    ``trace_count`` counts actual jit traces (the counter increments inside
+    the traced python body, which only runs on an XLA compile) — the
+    retrace metric `Session.metrics` reports.  The ``width`` argument of
+    the batched entry points lets the Session pad term matrices to shared
+    buckets so equal-shaped traffic reuses one trace."""
 
     host_index: NonPositionalIndex | PositionalIndex
     arrays: dict[str, jax.Array]
     n_docs: float  # idf denominator (docs, or tokens for positional)
     probe: str = "vmap"  # "vmap" | "kernel" (Pallas anchor_intersect)
+    #: device-step kinds this server can run (Session routes through this)
+    kinds: frozenset = SERVER_KINDS
     _steps: dict = field(default_factory=dict)
+    trace_events: int = 0
     # host-side copies of the immutable planning arrays, so encode /
     # window counting never does a device->host transfer per batch
     _lengths_np: np.ndarray | None = None
@@ -554,38 +393,37 @@ class BatchedServer:
         return cls(host_index=index, arrays=arrays,
                    n_docs=float(index.universe_size), probe=probe)
 
+    @property
+    def trace_count(self) -> int:
+        return self.trace_events
+
+    def c_entries(self, list_id: int) -> int:
+        """C-entry count of one list (window-sweep length; cost model)."""
+        c = self._c_offsets_np
+        return int(c[list_id + 1] - c[list_id])
+
     # -- encoding -------------------------------------------------------
-    def encode(self, queries: list[list[str]],
-               sort_by_length: bool = False) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Pad term lists to (B, max_terms) id matrices.  Queries with any
-        unknown term are marked invalid (their result is empty; the padded
-        row still flows through the step so shapes stay static).  With
-        ``sort_by_length`` (AND / top-k only — order matters for phrases)
-        the rarest term drives candidate generation, like the host path,
-        which minimizes the window sweep."""
-        width = max(2, max(len(q) for q in queries))
-        lengths = self._lengths_np
-        qt = np.zeros((len(queries), width), np.int32)
-        ql = np.ones(len(queries), np.int32)
-        ok = np.ones(len(queries), bool)
-        for i, q in enumerate(queries):
-            ids = [_lookup(self.host_index, t) for t in q]
-            if any(v is None for v in ids):
-                ok[i] = False
-                continue
-            if sort_by_length:
-                ids = sorted(ids, key=lambda w: lengths[w])
-            qt[i, : len(ids)] = ids
-            ql[i] = len(ids)
-        return qt, ql, ok
+    def encode(self, queries: list[list[str]], sort_by_length: bool = False,
+               width: int | None = None) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """See :func:`encode_queries` (the shared driver encode step)."""
+        return encode_queries(self.host_index, self._lengths_np, queries,
+                              sort_by_length=sort_by_length, width=width)
 
     def _step(self, kind: str, width: int, topk: int = 0, doclist: bool = False):
         key = (kind, width, topk, doclist)
         if key not in self._steps:
             mode = PHRASE if kind == PHRASE else AND
-            self._steps[key] = jax.jit(make_serve_step(
-                max_terms=width, mode=mode, topk=topk, n_docs=self.n_docs,
-                probe=self.probe, doclist=doclist))
+            raw = make_serve_step(max_terms=width, mode=mode, topk=topk,
+                                  n_docs=self.n_docs, probe=self.probe,
+                                  doclist=doclist)
+
+            def counted(index, query_terms, query_lens, row_start=0, _raw=raw):
+                # this body runs only while jax traces (i.e. on a compile),
+                # so the increment counts actual retraces
+                self.trace_events += 1
+                return _raw(index, query_terms, query_lens, row_start)
+
+            self._steps[key] = jax.jit(counted)
         return self._steps[key]
 
     def _n_windows(self, qt: np.ndarray, ok: np.ndarray) -> int:
@@ -594,8 +432,10 @@ class BatchedServer:
         rows = c_off[first + 1] - c_off[first]
         return max(1, int(-(-int(rows.max()) // MAX_CAND_ROWS)))
 
-    def _sweep(self, kind: str, queries: list[list[str]]) -> list[np.ndarray]:
-        qt, ql, ok = self.encode(queries, sort_by_length=(kind != PHRASE))
+    def _sweep(self, kind: str, queries: list[list[str]],
+               width: int | None = None) -> list[np.ndarray]:
+        qt, ql, ok = self.encode(queries, sort_by_length=(kind != PHRASE),
+                                 width=width)
         step = self._step(kind, qt.shape[1])
         hits: list[list[np.ndarray]] = [[] for _ in queries]
         for w in range(self._n_windows(qt, ok)):
@@ -610,16 +450,19 @@ class BatchedServer:
                 for h, o in zip(hits, ok)]
 
     # -- public batched entry points ------------------------------------
-    def conjunctive(self, queries: list[list[str]]) -> list[np.ndarray]:
+    def conjunctive(self, queries: list[list[str]],
+                    width: int | None = None) -> list[np.ndarray]:
         """Batched AND: sorted doc ids per query, exact for any list length."""
-        return self._sweep(AND, queries)
+        return self._sweep(AND, queries, width=width)
 
-    def phrase(self, queries: list[list[str]]) -> list[np.ndarray]:
+    def phrase(self, queries: list[list[str]],
+               width: int | None = None) -> list[np.ndarray]:
         """Batched phrase: sorted start positions per query (positional
         index).  Use ``positions_to_docs`` on the host index for (doc, off)."""
-        return self._sweep(PHRASE, queries)
+        return self._sweep(PHRASE, queries, width=width)
 
-    def doclist(self, queries: list[list[str]], phrase: bool = False) -> list[np.ndarray]:
+    def doclist(self, queries: list[list[str]], phrase: bool = False,
+                width: int | None = None) -> list[np.ndarray]:
         """Batched document listing: sorted distinct doc ids per query.
 
         The position->document mapping and the per-window dedup (segment-max
@@ -627,7 +470,7 @@ class BatchedServer:
         distinct survivors of each window cross back to the host, which
         unions them across windows — exact for lists of any length."""
         kind = PHRASE if phrase else AND
-        qt, ql, ok = self.encode(queries, sort_by_length=not phrase)
+        qt, ql, ok = self.encode(queries, sort_by_length=not phrase, width=width)
         step = self._step(kind, qt.shape[1], doclist=True)
         hits: list[list[np.ndarray]] = [[] for _ in queries]
         for w in range(self._n_windows(qt, ok)):
@@ -641,11 +484,12 @@ class BatchedServer:
         return [np.unique(np.concatenate(h)).astype(np.int64) if (o and h) else empty
                 for h, o in zip(hits, ok)]
 
-    def topk(self, queries: list[list[str]], k: int = 10) -> list[np.ndarray]:
+    def topk(self, queries: list[list[str]], k: int = 10,
+             width: int | None = None) -> list[np.ndarray]:
         """Batched ranked AND: first k matches under the idf-proxy weight
         (matches the host ``ranked_and`` order).  Ranking runs on device;
         the window sweep stops as soon as every query has k hits."""
-        qt, ql, ok = self.encode(queries, sort_by_length=True)
+        qt, ql, ok = self.encode(queries, sort_by_length=True, width=width)
         step = self._step(AND, qt.shape[1], topk=int(k))
         got: list[list[np.ndarray]] = [[] for _ in queries]
         counts = np.zeros(len(queries), np.int64)

@@ -13,11 +13,18 @@ Both query kinds of the batched engine run under this layout: conjunctive
 AND (mode="and") and offset-shifted phrase probes (mode="phrase"); the
 ``row_start`` argument is the same candidate-window cursor as in
 ``engine.candidates_for``, so long per-shard lists are swept exactly.
+
+:class:`PartitionedServer` wraps the sharded layout in the batched-server
+protocol (``conjunctive`` / ``phrase`` / ``encode`` / ``trace_count``), so
+a ``Session`` can route device traffic onto the shards exactly like onto a
+single :class:`~repro.serving.engine.BatchedServer` — it declares
+``kinds = {"and", "phrase"}`` and the plan compiler keeps top-k and doc
+listing on the host.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.anchors import AnchoredIndex, build_anchored
 from ..sharding.compat import shard_map
-from .engine import MAX_CAND_ROWS, _probe_terms, candidates_for
+from .engine import MAX_CAND_ROWS, _probe_terms, candidates_for, encode_queries
 
 
 @dataclass
@@ -169,3 +176,119 @@ def merge_results(vals: np.ndarray, mask: np.ndarray) -> list[np.ndarray]:
         hits = vals[:, qi][mask[:, qi]]
         out.append(np.unique(hits))
     return out
+
+
+# ----------------------------------------------------------------------
+# Session-compatible driver over the sharded layout
+# ----------------------------------------------------------------------
+@dataclass
+class PartitionedServer:
+    """Batched-server protocol over a :class:`PartitionedAnchoredIndex`.
+
+    With a ``mesh`` the per-window step runs under ``shard_map`` (every
+    probe shard-local, queries replicated); without one it loops shards on
+    the host through one jitted shard-local step — the single-device path,
+    exact and trace-stable, so a ``Session`` can serve a sharded layout on
+    any device count.  Only conjunctive and phrase steps exist shard-local
+    (``kinds``); the plan compiler routes top-k / doc listing to the host.
+    """
+
+    pidx: PartitionedAnchoredIndex
+    host_index: object  # the built index the shards were cut from (lookup())
+    mesh: object | None = None
+    shard_axis: str = "data"
+    kinds: frozenset = frozenset({"and", "phrase"})
+    _steps: dict = field(default_factory=dict)
+    trace_events: int = 0
+    _lengths_np: np.ndarray | None = None  # global lengths: sum over shards
+    _c_offsets_np: np.ndarray | None = None  # (S, T+1) per-shard C-offsets
+
+    def __post_init__(self):
+        if self._lengths_np is None:
+            self._lengths_np = np.asarray(self.pidx.arrays["lengths"]).sum(axis=0)
+        if self._c_offsets_np is None:
+            self._c_offsets_np = np.asarray(self.pidx.arrays["c_offsets"])
+
+    @property
+    def trace_count(self) -> int:
+        return self.trace_events
+
+    def c_entries(self, list_id: int) -> int:
+        """Max C-entries of one list over the shards (window-sweep length)."""
+        c = self._c_offsets_np
+        return int((c[:, list_id + 1] - c[:, list_id]).max())
+
+    def encode(self, queries: list[list[str]], sort_by_length: bool = False,
+               width: int | None = None):
+        """Pad to (B, width) global term ids (the shared
+        :func:`~repro.serving.engine.encode_queries` step; lengths for the
+        rarest-first sort are the shard-summed global list lengths)."""
+        return encode_queries(self.host_index, self._lengths_np, queries,
+                              sort_by_length=sort_by_length, width=width)
+
+    def _step(self, mode: str, width: int):
+        key = (mode, width)
+        if key not in self._steps:
+            if self.mesh is not None:
+                raw = make_partitioned_serve_step(
+                    max_terms=width, mesh=self.mesh,
+                    shard_axis=self.shard_axis, mode=mode)
+
+                def counted(arrays, qt, ql, row_start, _raw=raw):
+                    # runs only while jax traces — counts actual retraces
+                    self.trace_events += 1
+                    return _raw(arrays, qt, ql, row_start)
+
+                serve = jax.jit(counted)
+            else:
+                def local(local_arrays, qt, ql, row_start, _mode=mode, _w=width):
+                    # runs only while jax traces — counts actual retraces
+                    self.trace_events += 1
+                    return _local_serve(local_arrays, qt, ql, _w, mode=_mode,
+                                        row_start=row_start)
+
+                jitted = jax.jit(local)
+
+                def serve(arrays, qt, ql, row_start, _j=jitted):
+                    outs = []
+                    for s in range(self.pidx.n_shards):
+                        local_arrays = {k: v[s] for k, v in arrays.items()
+                                        if k != "doc_base"}
+                        local_arrays["doc_base"] = arrays["doc_base"][s:s + 1]
+                        outs.append(_j(local_arrays, qt, ql, row_start))
+                    vals = jnp.stack([v for v, _ in outs])
+                    mask = jnp.stack([m for _, m in outs])
+                    return vals, mask
+            self._steps[key] = serve
+        return self._steps[key]
+
+    def _sweep(self, mode: str, queries: list[list[str]],
+               width: int | None = None) -> list[np.ndarray]:
+        qt, ql, ok = self.encode(queries, sort_by_length=(mode != "phrase"),
+                                 width=width)
+        serve = self._step(mode, qt.shape[1])
+        c = self._c_offsets_np
+        first = qt[:, 0][ok] if ok.any() else qt[:1, 0]
+        rows = int((c[:, first + 1] - c[:, first]).max())
+        hits: list[list[np.ndarray]] = [[] for _ in queries]
+        for w in range(max(1, -(-rows // MAX_CAND_ROWS))):
+            vals, mask = serve(self.pidx.arrays, jnp.asarray(qt),
+                               jnp.asarray(ql), w * MAX_CAND_ROWS)
+            vals, mask = np.asarray(vals), np.asarray(mask)
+            for qi in range(len(queries)):
+                if ok[qi]:
+                    hits[qi].append(vals[:, qi][mask[:, qi]])
+        empty = np.zeros(0, np.int64)
+        return [np.unique(np.concatenate(h)).astype(np.int64) if (o and h) else empty
+                for h, o in zip(hits, ok)]
+
+    def conjunctive(self, queries: list[list[str]],
+                    width: int | None = None) -> list[np.ndarray]:
+        """Batched AND across all shards: sorted global doc ids, exact."""
+        return self._sweep("and", queries, width=width)
+
+    def phrase(self, queries: list[list[str]],
+               width: int | None = None) -> list[np.ndarray]:
+        """Batched phrase across all shards (cut shard bounds at document
+        starts so phrases never span shards)."""
+        return self._sweep("phrase", queries, width=width)

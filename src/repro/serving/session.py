@@ -1,0 +1,328 @@
+"""`Session` — the one serving entry point over compiled query plans.
+
+A :class:`Session` owns the built indexes (non-positional and/or
+positional), the optional batched device servers, a **plan cache**, and the
+host execution operators.  Everything the old per-kind ``QueryEngine``
+surface did now flows through two methods:
+
+* :meth:`Session.execute` — serve one query or a heterogeneous batch.
+  Every query is parsed, routed through the plan compiler
+  (``serving.plan.route_query``), and grouped with the other queries that
+  share its **physical plan shape**: device-routed queries of one shape
+  (index, kind, k, phrase-ness, padded width bucket) run as a single
+  padded device batch, so they share one jit trace; host-routed queries
+  execute through the capability-selected operators.  Routes are cached
+  keyed by ``plan_key`` (plan structure × backend × batch bucket) — a
+  repeated traffic shape performs **zero re-plans and zero re-traces**
+  (see :meth:`metrics`).
+
+* :meth:`Session.explain` — the costed physical operator tree for a query
+  as text or JSON, without executing it.
+
+The legacy ``QueryEngine`` / ``BatchedServer.{conjunctive,phrase,...}``
+surfaces remain as thin shims over a ``Session`` for one PR (they emit a
+``DeprecationWarning``); new code should build a Session directly:
+
+    sess = Session.build(index, positional=pidx)      # device-attached
+    results = sess.execute(["w1 w2", '"a b"', "top5: w1 w2"])
+    print(sess.explain('docs: "a b"'))
+    print(sess.metrics())   # plan-cache hit rate, jit trace count, ...
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.doclist import (
+    DocRunIndex,
+    doc_list_terms,
+    positions_to_doc_counts,
+    positions_to_docs,
+    rank_docs,
+)
+from ..core.index import NonPositionalIndex, PositionalIndex
+from .plan import (
+    AND,
+    DOCS,
+    DOCS_TOPK,
+    PHRASE,
+    TOPK,
+    WORD,
+    ParsedQuery,
+    Route,
+    compile_query,
+    explain_json,
+    explain_text,
+    parse_query,
+    plan_key,
+    route_query,
+)
+
+
+@dataclass
+class Session:
+    """One serving session: indexes + device servers + plan cache."""
+
+    index: NonPositionalIndex | None = None
+    positional: PositionalIndex | None = None
+    server: object | None = None  # device path over `index`
+    positional_server: object | None = None  # device path over `positional`
+
+    def __post_init__(self):
+        self._plan_cache: dict[tuple, Route] = {}
+        self._doc_run_index: DocRunIndex | None = None
+        self.plans_compiled = 0
+        self.plan_cache_hits = 0
+        self.queries_executed = 0
+        self.device_batches = 0
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def build(cls, index: NonPositionalIndex | None = None,
+              positional: PositionalIndex | None = None, device: bool = True,
+              probe: str = "vmap", expand_len: int = 32) -> "Session":
+        """Build a session over already-built indexes, attaching batched
+        device servers where that helps: self-index backends always serve
+        natively on the host (their ``locate`` answers whole patterns — no
+        per-term probe loop to batch), so they get no server."""
+        from ..core.registry import FAMILY_SELFINDEX, get_backend_spec
+        from .engine import BatchedServer
+
+        def attach(ix):
+            return (device and ix is not None
+                    and get_backend_spec(ix.store_name).family != FAMILY_SELFINDEX)
+
+        return cls(
+            index=index, positional=positional,
+            server=(BatchedServer.from_index(index, expand_len=expand_len,
+                                             probe=probe)
+                    if attach(index) else None),
+            positional_server=(BatchedServer.from_index(
+                positional, expand_len=expand_len, probe=probe)
+                if attach(positional) else None))
+
+    # -- planning -------------------------------------------------------
+    def plan(self, q, prefer_device: bool = True) -> Route:
+        """The (cached) routing decision for one query shape."""
+        pq = parse_query(q)
+        if not prefer_device:  # off-path (diagnostics): don't pollute the cache
+            return route_query(self, pq, prefer_device=False)
+        key = plan_key(self, pq)
+        rt = self._plan_cache.get(key)
+        if rt is None:
+            rt = route_query(self, pq)
+            self._plan_cache[key] = rt
+            self.plans_compiled += 1
+        else:
+            self.plan_cache_hits += 1
+        return rt
+
+    def explain(self, q, fmt: str = "text", extract: int | None = None):
+        """The costed physical plan for ``q`` — ``fmt="text"`` (operator
+        tree, one node per line) or ``"json"`` (nested dict).  Does not
+        execute the query and does not touch the execution counters."""
+        raw = q if isinstance(q, str) else None
+        cq = compile_query(self, q, extract=extract)
+        if fmt == "json":
+            return explain_json(cq, raw=raw)
+        if fmt != "text":
+            raise ValueError(f"unknown explain format {fmt!r}; use 'text' or 'json'")
+        return explain_text(cq, raw=raw)
+
+    # -- metrics --------------------------------------------------------
+    @property
+    def jit_traces(self) -> int:
+        """Total device-step traces across the attached servers (a retrace
+        is a compile — the quantity the plan/batch bucketing minimizes)."""
+        return sum(int(getattr(s, "trace_count", 0))
+                   for s in (self.server, self.positional_server) if s is not None)
+
+    def metrics(self) -> dict:
+        total = self.plans_compiled + self.plan_cache_hits
+        return {
+            "queries_executed": self.queries_executed,
+            "device_batches": self.device_batches,
+            "plans_compiled": self.plans_compiled,
+            "plan_cache_hits": self.plan_cache_hits,
+            "plan_cache_hit_rate": round(self.plan_cache_hits / total, 4) if total else 0.0,
+            "jit_traces": self.jit_traces,
+        }
+
+    # -- execution ------------------------------------------------------
+    def execute(self, queries):
+        """Serve one query (string / ``ParsedQuery`` → one array) or a
+        heterogeneous batch (list/tuple of queries → list of arrays, in
+        the original order).  Device-routed queries are grouped by
+        physical-plan shape so each shape runs as one padded jit-stable
+        device batch; host-routed queries run through the
+        capability-selected operators."""
+        single = isinstance(queries, (str, ParsedQuery))
+        batch = [queries] if single else list(queries)
+        parsed = [parse_query(q) for q in batch]
+        routes = [self.plan(pq) for pq in parsed]
+        self.queries_executed += len(batch)
+        out: list[np.ndarray | None] = [None] * len(batch)
+        groups: dict[tuple, list[int]] = {}
+        for i, (pq, rt) in enumerate(zip(parsed, routes)):
+            if rt.route == "device":
+                key = (rt.index, pq.kind, pq.k, pq.phrase, rt.width)
+                groups.setdefault(key, []).append(i)
+            else:
+                out[i] = self._execute_host(pq)
+        for (index_name, kind, k, phrase, width), idxs in groups.items():
+            server = self.server if index_name == "nonpositional" else self.positional_server
+            sub = [list(parsed[i].terms) for i in idxs]
+            if kind == TOPK:
+                res = server.topk(sub, k=k or 10, width=width)
+            elif kind == DOCS:
+                res = server.doclist(sub, phrase=phrase, width=width)
+            elif kind == PHRASE:
+                res = server.phrase(sub, width=width)
+            else:
+                res = server.conjunctive(sub, width=width)
+            self.device_batches += 1
+            for i, r in zip(idxs, res):
+                out[i] = r
+        return out[0] if single else out
+
+    def _execute_host(self, pq: ParsedQuery) -> np.ndarray:
+        if not pq.terms:  # defensive: manually built ParsedQuery
+            return np.zeros(0, dtype=np.int64)
+        if pq.kind == WORD:
+            return self._word(pq.terms[0])
+        if pq.kind == AND:
+            return self._conjunctive(list(pq.terms))
+        if pq.kind == PHRASE:
+            return self._phrase(list(pq.terms))
+        if pq.kind == TOPK:
+            return self._ranked_and(list(pq.terms), k=pq.k or 10)
+        if pq.kind == DOCS:
+            return self._doc_list(list(pq.terms), phrase=pq.phrase)
+        if pq.kind == DOCS_TOPK:
+            return self._doc_topk(list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
+        raise ValueError(pq.kind)
+
+    # -- host physical operators (the paper's sequential algorithms) ----
+    def _word(self, w: str) -> np.ndarray:
+        if self.index is None:
+            raise ValueError("word queries require the nonpositional index")
+        return np.asarray(self.index.query_word(w))
+
+    def _conjunctive(self, words: list[str]) -> np.ndarray:
+        if self.index is None:
+            raise ValueError("AND queries require the nonpositional index")
+        return np.asarray(self.index.query_and(words))
+
+    def _phrase(self, tokens: list[str]) -> np.ndarray:
+        """Positions of the first token of each phrase occurrence (§5.2)."""
+        if self.positional is None:
+            raise ValueError("phrase queries require a PositionalIndex")
+        return np.asarray(self.positional.query_phrase(list(tokens)))
+
+    def _ranked_and(self, words: list[str], k: int = 10) -> np.ndarray:
+        """Google-style ranked AND: intersect, then rank by term frequency
+        proxy (shorter lists = rarer terms weigh more)."""
+        docs = self._conjunctive(words)
+        if len(docs) == 0:
+            return docs
+        weights = np.zeros(len(docs))
+        for w in words:
+            wid = self.index.word_id(w)
+            if wid is None:
+                continue
+            ell = max(1, self.index.store.list_length(wid))
+            weights += np.log1p(self.index.n_docs / ell)
+        order = np.argsort(-weights, kind="stable")
+        return docs[order][:k]
+
+    # -- document listing (the docs: / docs-top<k>: workload) -----------
+    def doc_runs(self) -> DocRunIndex:
+        """The ILCP-style per-term document-run structure over the
+        positional store (built lazily, cached; see ``core.doclist``)."""
+        if self.positional is None:
+            raise ValueError("the doc-run structure requires the PositionalIndex")
+        if self._doc_run_index is None:
+            self._doc_run_index = DocRunIndex(self.positional.store,
+                                              self.positional.doc_starts)
+        return self._doc_run_index
+
+    def _doc_list(self, terms: list[str], phrase: bool = False) -> np.ndarray:
+        """Distinct (sorted) doc ids containing all ``terms`` (``phrase`` —
+        containing the exact phrase).  Phrase listing runs on the positional
+        index: the pattern's positions reduce to documents through the
+        doc-boundary array, with the run / grammar fast paths for
+        single-term patterns.  Word listing uses the non-positional index
+        when present (its postings *are* doc ids) and falls back to
+        intersecting per-term document runs for positional-only sessions."""
+        terms = list(terms)
+        if not terms:
+            return np.zeros(0, dtype=np.int64)
+        if phrase or self.index is None:
+            if self.positional is None:
+                raise ValueError("phrase document listing requires the PositionalIndex")
+            ids = [self.positional.lookup(t) for t in terms]
+            if any(i is None for i in ids):
+                return np.zeros(0, dtype=np.int64)
+            if phrase and len(terms) > 1:
+                return positions_to_docs(self._phrase(terms),
+                                         self.positional.doc_starts)
+            # single token, or positional-only conjunction: per-term runs
+            return doc_list_terms(self.doc_runs(), ids)
+        docs = self._conjunctive(terms) if len(terms) > 1 else self._word(terms[0])
+        return positions_to_docs(docs, None)
+
+    def _doc_topk(self, terms: list[str], k: int = 10, phrase: bool = False) -> np.ndarray:
+        """Ranked document retrieval: top-``k`` docs by pattern frequency
+        (phrase occurrences, or summed term frequencies for conjunctions),
+        ties broken by lowest doc id.  Frequencies come from the positional
+        doc-run structure; without a positional index every document counts
+        once and the ranking degenerates to doc-id order."""
+        terms = list(terms)
+        docs = self._doc_list(terms, phrase=phrase)
+        if len(docs) == 0:
+            return docs
+        k = k or 10
+        if self.positional is None:
+            return docs[:k]
+        if phrase and len(terms) > 1:
+            pdocs, counts = positions_to_doc_counts(self._phrase(terms),
+                                                    self.positional.doc_starts)
+            return rank_docs(pdocs, counts, k)
+        runs = self.doc_runs()
+        scores = np.zeros(len(docs), dtype=np.int64)
+        for t in terms:
+            tid = self.positional.lookup(t)
+            if tid is not None:
+                scores += runs.term_frequencies(tid, docs)
+        return rank_docs(docs, scores, k)
+
+    # -- snippet extraction (the Extract logical operator) --------------
+    def extract(self, q, context: int = 2) -> list[np.ndarray]:
+        """Token-id windows of ``context`` tokens around every occurrence
+        of a word or phrase query.  Requires a positional index whose
+        backend declares the ``extract`` capability (self-indexes
+        reproduce the stream from the index) or that kept its token
+        stream (``keep_text=True``)."""
+        pq = parse_query(q)
+        if pq.kind not in (WORD, PHRASE):
+            raise ValueError(f"extract serves word/phrase queries, not {pq.kind}")
+        if self.positional is None:
+            raise ValueError("extract requires a PositionalIndex")
+        pos = np.asarray(self.positional.query_phrase(list(pq.terms)))
+        store, stream = self.positional.store, self.positional.token_stream
+        n, m = int(self.positional.n_tokens), len(pq.terms)
+        out = []
+        for p in pos.tolist():
+            lo, hi = max(0, p - context), min(n, p + m + context)
+            if hasattr(store, "extract"):  # self-index: stream[x..y] inclusive
+                out.append(np.asarray(store.extract(lo, hi - 1), dtype=np.int64))
+            elif stream is not None:
+                out.append(np.asarray(stream[lo:hi], dtype=np.int64))
+            else:
+                raise ValueError(
+                    f"backend {self.positional.store_name!r} lacks the "
+                    f"'extract' capability and the index kept no token "
+                    f"stream (build with keep_text=True)")
+        return out
