@@ -1,0 +1,139 @@
+"""Index lifecycle benchmark: commit latency, open-vs-build, compaction.
+
+The economics the segmented lifecycle must deliver (paper premise: growing
+versioned collections must not re-index the world):
+
+* **commit latency** — ingesting one batch of new versions through
+  :class:`~repro.core.writer.IndexWriter` costs the batch, not the
+  collection: per-commit wall time is reported next to the one-shot
+  full-rebuild time it replaces;
+* **open vs build** — ``Session.open`` on the persisted artifact vs
+  rebuilding the same indexes from raw documents (restore hooks reload
+  Re-Pair grammars without recompression, so opening should win);
+* **q/s before/after compaction** — a mixed query batch served against
+  the multi-segment layout and again after ``compact()`` merges it to one
+  segment (per-segment execution + merge vs single-index execution).
+
+Emits a JSON object on stdout after the human-readable report.
+
+    PYTHONPATH=src python benchmarks/ingest_throughput.py
+    PYTHONPATH=src python benchmarks/ingest_throughput.py --store repair_skip --commits 5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.core.writer import IndexWriter
+from repro.data import generate_collection
+from repro.data.queries import sample_traffic
+from repro.serving.session import Session
+
+
+def _qps(session: Session, queries, repeats: int) -> float:
+    session.execute(queries)  # warm: compile plans, trace device steps
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        session.execute(queries)
+    return repeats * len(queries) / (time.perf_counter() - t0)
+
+
+def run(store: str = "repair_skip", commits: int = 4, batch: int = 64,
+        repeats: int = 3, seed: int = 0, workdir: str | None = None) -> dict:
+    col = generate_collection(n_articles=8, versions_per_article=20,
+                              words_per_doc=150, seed=seed)
+    docs = col.docs
+    rng = np.random.default_rng(seed)
+
+    # baseline: the one-shot in-memory rebuild every commit would otherwise pay
+    t0 = time.perf_counter()
+    idx = NonPositionalIndex.build(docs, store=store)
+    pidx = PositionalIndex.build(docs, store=store)
+    build_s = time.perf_counter() - t0
+
+    root = Path(workdir or tempfile.mkdtemp(prefix="ingest_bench_"))
+    writer_dir = root / "ix"
+    try:
+        writer = IndexWriter(writer_dir, store=store, positional=True)
+        per = max(1, -(-len(docs) // commits))
+        commit_times = []
+        for c in range(0, len(docs), per):
+            writer.add_documents(docs[c:c + per])
+            t0 = time.perf_counter()
+            writer.commit()
+            commit_times.append(time.perf_counter() - t0)
+
+        # open-vs-build compares like with like: artifact reload without
+        # device attach vs the raw index build above (no servers either)
+        t0 = time.perf_counter()
+        Session.open(writer_dir, device=False)
+        open_s = time.perf_counter() - t0
+        session = Session.open(writer_dir)
+
+        words = [w for w in idx.vocab.id_to_token[:300]]
+        queries = sample_traffic("mixed", batch, docs, words, rng)
+        qps_segmented = _qps(session, queries, repeats)
+        seg_metrics = session.metrics()
+
+        t0 = time.perf_counter()
+        writer.compact()
+        compact_s = time.perf_counter() - t0
+        session.refresh()
+        qps_compacted = _qps(session, queries, repeats)
+    finally:
+        if workdir is None:
+            shutil.rmtree(root, ignore_errors=True)
+
+    report = {
+        "store": store,
+        "n_docs": len(docs),
+        "commits": len(commit_times),
+        "one_shot_build_s": round(build_s, 3),
+        "commit_latency_s": [round(t, 3) for t in commit_times],
+        "commit_latency_mean_s": round(float(np.mean(commit_times)), 3),
+        "open_s": round(open_s, 3),
+        "open_vs_build": round(open_s / build_s, 3) if build_s else None,
+        "compact_s": round(compact_s, 3),
+        "qps_segmented": round(qps_segmented, 1),
+        "qps_compacted": round(qps_compacted, 1),
+        "segmented_plan_cache_hit_rate": seg_metrics["plan_cache_hit_rate"],
+        "segmented_jit_traces": seg_metrics["jit_traces"],
+    }
+    print(f"{store}: one-shot build {build_s:.2f}s vs "
+          f"mean commit {report['commit_latency_mean_s']:.2f}s "
+          f"({len(commit_times)} commits)")
+    print(f"open {open_s:.2f}s ({report['open_vs_build']:.2f}x of build); "
+          f"compact {compact_s:.2f}s")
+    print(f"mixed batch={batch}: {qps_segmented:.0f} q/s segmented -> "
+          f"{qps_compacted:.0f} q/s compacted")
+    return report
+
+
+def main() -> None:
+    from repro.core.registry import backend_names
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", type=str, default="repair_skip",
+                    choices=backend_names())
+    ap.add_argument("--commits", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workdir", type=str, default=None,
+                    help="keep artifacts here instead of a temp dir")
+    args = ap.parse_args()
+    report = run(store=args.store, commits=args.commits, batch=args.batch,
+                 repeats=args.repeats, seed=args.seed, workdir=args.workdir)
+    print(json.dumps({"ingest_throughput": report}))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,19 +10,31 @@ traffic — the measurable win of plan caching + width-bucketed batching),
 plus the cumulative session totals.  Emits a JSON object (one entry per
 (mix, batch_size)) on stdout after the human-readable table.
 
+With ``--segments N`` the same collection is first persisted through a
+segmented ``IndexWriter`` (N commits) and served via ``Session.open`` on
+the multi-segment artifact — per-segment execution merged on doc/token
+offsets.  Warmed traffic must still report plan-cache hit rate 1.00 and
+zero retraces (the segment shape is part of the cache key), which is the
+acceptance gate for the segment-aware serving path.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py
     PYTHONPATH=src python benchmarks/serving_throughput.py --store repair_skip --probe vmap
+    PYTHONPATH=src python benchmarks/serving_throughput.py --segments 3
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import shutil
+import tempfile
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.core.writer import IndexWriter
 from repro.data import generate_collection
 from repro.data.queries import sample_traffic
 from repro.serving.session import Session
@@ -32,45 +44,62 @@ MIXES = ("word", "and", "phrase", "mixed")
 
 
 def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
-        seed: int = 0) -> list[dict]:
+        seed: int = 0, segments: int = 0) -> list[dict]:
     col = generate_collection(n_articles=10, versions_per_article=25,
                               words_per_doc=200, seed=seed)
-    idx = NonPositionalIndex.build(col.docs, store=store)
-    pidx = PositionalIndex.build(col.docs, store=store)
-    session = Session.build(idx, positional=pidx, probe=probe)
-    host = Session(idx, positional=pidx)
+    workdir: Path | None = None
+    if segments:
+        workdir = Path(tempfile.mkdtemp(prefix="serving_bench_"))
+        writer = IndexWriter(workdir / "ix", store=store, positional=True)
+        per = max(1, -(-col.n_docs // segments))
+        for c in range(0, col.n_docs, per):
+            writer.add_documents(col.docs[c:c + per])
+            writer.commit()
+        session = Session.open(workdir / "ix", probe=probe)
+        host = Session.open(workdir / "ix", device=False)
+    else:
+        idx = NonPositionalIndex.build(col.docs, store=store)
+        pidx = PositionalIndex.build(col.docs, store=store)
+        session = Session.build(idx, positional=pidx, probe=probe)
+        host = Session(idx, positional=pidx)
     rng = np.random.default_rng(seed)
 
-    words = [w for w in idx.vocab.id_to_token[:300]]
+    words = [w for w in session.primary_index.vocab.id_to_token[:300]]
     rows = []
-    for mix in MIXES:
-        for bs in BATCH_SIZES:
-            queries = sample_traffic(mix, bs, col.docs, words, rng)
-            session.execute(queries)  # compile plans / trace steps
-            warm = session.metrics()
-            t0 = time.perf_counter()
-            for _ in range(repeats):
-                session.execute(queries)
-            dev_qps = repeats * bs / (time.perf_counter() - t0)
-            m = session.metrics()
-            d_hits = m["plan_cache_hits"] - warm["plan_cache_hits"]
-            d_comp = m["plans_compiled"] - warm["plans_compiled"]
-            d_total = d_hits + d_comp
-            hit_rate = round(d_hits / d_total, 4) if d_total else 1.0
-            retraces = m["jit_traces"] - warm["jit_traces"]
-            t0 = time.perf_counter()
-            host.execute(queries)
-            host_qps = bs / (time.perf_counter() - t0)
-            rows.append({"mix": mix, "batch_size": bs, "store": store,
-                         "probe": probe, "device_qps": round(dev_qps, 1),
-                         "host_qps": round(host_qps, 1),
-                         "plan_cache_hit_rate": hit_rate,
-                         "jit_retraces": retraces,
-                         "session_plans_compiled": m["plans_compiled"],
-                         "session_jit_traces": m["jit_traces"]})
-            print(f"{mix:>6} b={bs:<4} device {dev_qps:9.1f} q/s   "
-                  f"host {host_qps:9.1f} q/s   plan-cache {hit_rate:.2f}   "
-                  f"retraces {retraces}")
+    try:
+        for mix in MIXES:
+            for bs in BATCH_SIZES:
+                queries = sample_traffic(mix, bs, col.docs, words, rng)
+                session.execute(queries)  # compile plans / trace steps
+                warm = session.metrics()
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    session.execute(queries)
+                dev_qps = repeats * bs / (time.perf_counter() - t0)
+                m = session.metrics()
+                d_hits = m["plan_cache_hits"] - warm["plan_cache_hits"]
+                d_comp = m["plans_compiled"] - warm["plans_compiled"]
+                d_total = d_hits + d_comp
+                hit_rate = round(d_hits / d_total, 4) if d_total else 1.0
+                retraces = m["jit_traces"] - warm["jit_traces"]
+                t0 = time.perf_counter()
+                host.execute(queries)
+                host_qps = bs / (time.perf_counter() - t0)
+                rows.append({"mix": mix, "batch_size": bs, "store": store,
+                             "probe": probe, "segments": segments,
+                             "device_qps": round(dev_qps, 1),
+                             "host_qps": round(host_qps, 1),
+                             "plan_cache_hit_rate": hit_rate,
+                             "jit_retraces": retraces,
+                             "session_plans_compiled": m["plans_compiled"],
+                             "session_jit_traces": m["jit_traces"]})
+                print(f"{mix:>6} b={bs:<4} device {dev_qps:9.1f} q/s   "
+                      f"host {host_qps:9.1f} q/s   plan-cache {hit_rate:.2f}   "
+                      f"retraces {retraces}"
+                      + (f"   segments {segments}" if segments else ""))
+    finally:
+        if workdir is not None:
+            shutil.rmtree(workdir, ignore_errors=True)
     return rows
 
 
@@ -83,8 +112,13 @@ def main() -> None:
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--segments", type=int, default=0,
+                    help="persist the collection in N IndexWriter commits "
+                         "and serve the multi-segment artifact via "
+                         "Session.open (0 = in-memory single index)")
     args = ap.parse_args()
-    rows = run(store=args.store, probe=args.probe, repeats=args.repeats, seed=args.seed)
+    rows = run(store=args.store, probe=args.probe, repeats=args.repeats,
+               seed=args.seed, segments=args.segments)
     print(json.dumps({"serving_throughput": rows}))
 
 

@@ -27,4 +27,10 @@ python scripts/explain.py "top5: alpha beta" --store repair_skip
 python scripts/explain.py --sample docs-phrase --store rlcsa --json
 python scripts/explain.py --operators
 
+echo "== index lifecycle: build -> persist -> open -> serve -> ingest =="
+python scripts/list_backends.py --require persist > /dev/null
+LIFECYCLE_DIR=$(mktemp -d)
+trap 'rm -rf "$LIFECYCLE_DIR"' EXIT INT TERM
+python scripts/lifecycle_smoke.py "$LIFECYCLE_DIR"
+
 echo "ci OK"

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""CI smoke: the full index lifecycle in one pass, in a throwaway dir.
+
+    PYTHONPATH=src python scripts/lifecycle_smoke.py /tmp/workdir
+
+Stages (each prints one OK line; any failure is a non-zero exit):
+  1. build   — segmented IndexWriter over a synthetic versioned collection
+  2. persist — two commits, then a third (the "new version batch")
+  3. open    — Session.open on the writer dir; answers == in-memory build
+  4. serve   — all six query kinds, repeated batch must re-plan nothing
+  5. ingest  — live commit + refresh picks up the new segment
+  6. gate    — manifest checksums verify; a corrupted blob must fail
+               naming the bad component (and the artifact must still open
+               after the corruption is restored)
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.artifact import ArtifactError, open_index, read_manifest
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.core.writer import IndexWriter
+from repro.data import generate_collection
+from repro.serving.session import Session
+
+STORE = "repair_skip"
+
+
+def main(workdir: str) -> int:
+    root = Path(workdir)
+    col = generate_collection(n_articles=2, versions_per_article=5,
+                              words_per_doc=40, seed=7)
+    docs = col.docs
+    writer = IndexWriter(root / "ix", store=STORE, positional=True)
+    writer.add_documents(docs[:5])
+    writer.commit()
+    writer.add_documents(docs[5:])
+    writer.commit()
+    print(f"build+persist OK: {len(writer.segments)} segments, "
+          f"{writer.n_docs} docs")
+
+    session = Session.open(root / "ix")
+    one = Session(NonPositionalIndex.build(docs, store=STORE),
+                  positional=PositionalIndex.build(docs, store=STORE))
+    words = one.index.vocab.id_to_token[:4]
+    queries = [words[0], f"{words[0]} {words[1]}", f'"{words[0]} {words[1]}"',
+               f"top3: {words[0]} {words[1]}", f"docs: {words[0]}",
+               f"docs-top2: {words[0]} {words[1]}"]
+    got = session.execute(queries)
+    want = one.execute(queries)
+    for q, g, w in zip(queries, got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (
+            f"open/serve drift on {q!r}: {np.asarray(g)} != {np.asarray(w)}")
+    warm = session.metrics()
+    session.execute(queries)
+    m = session.metrics()
+    assert m["plans_compiled"] == warm["plans_compiled"], (warm, m)
+    assert m["jit_traces"] == warm["jit_traces"], (warm, m)
+    print(f"open+serve OK: {len(queries)} kinds byte-identical, "
+          f"0 re-plans / 0 retraces on the repeated batch")
+
+    live = IndexWriter.open(root / "ix")
+    live.add_documents(docs[:2])
+    seg = live.commit()
+    assert session.refresh() == 1
+    full = Session(NonPositionalIndex.build(docs + docs[:2], store=STORE),
+                   positional=PositionalIndex.build(docs + docs[:2], store=STORE))
+    for q, g, w in zip(queries, session.execute(queries), full.execute(queries)):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (
+            f"post-ingest drift on {q!r}")
+    print(f"ingest OK: {seg.name} committed live, answers match a full rebuild")
+
+    # checksum gate: verify-all passes, then corrupt one store blob and
+    # require the error path to name the component
+    art_dir = live.segment_dir(live.segments[0]) / "nonpositional"
+    manifest = read_manifest(art_dir)
+    open_index(art_dir)  # all checksums verify
+    name = sorted(n for n in manifest["components"] if n.startswith("store."))[0]
+    blob = art_dir / manifest["components"][name]["file"]
+    payload = blob.read_bytes()
+    blob.write_bytes(payload[:-1] + bytes([payload[-1] ^ 0xFF]))
+    try:
+        open_index(art_dir)
+    except ArtifactError as e:
+        assert name in str(e), f"corruption error does not name {name!r}: {e}"
+    else:
+        raise AssertionError("corrupted blob opened without error")
+    blob.write_bytes(payload)
+    open_index(art_dir)  # restored artifact opens again
+    print(f"checksum gate OK: corruption of {name!r} detected and named")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1]))

@@ -101,32 +101,45 @@ def build_vbyte_stb(source: BuildSource, B: int = 16):
 
 # ----------------------------------------------------------------------
 # Re-Pair grammar stores (§4) — device-resident; skip variants intersect
-# in the compressed domain, sampled variants also seek
+# in the compressed domain, sampled variants also seek.  Their restore
+# hooks reload the packed grammar arrays directly: opening an artifact
+# never re-runs Re-Pair compression (max_rules/k/B are already baked into
+# the persisted grammar and samples are rebuilt from it).
 # ----------------------------------------------------------------------
 @register_backend("repair", family=FAMILY_INVERTED, group="ours", paper="§4",
                   capabilities=(CAP_DEVICE_RESIDENT, CAP_DOC_LIST),
-                  doc="Re-Pair grammar over concatenated d-gap lists")
+                  doc="Re-Pair grammar over concatenated d-gap lists",
+                  restore=lambda arrays, max_rules=None:
+                      RePairStore.from_arrays(arrays, variant="plain"))
 def build_repair(source: BuildSource, max_rules: int | None = None):
     return RePairStore.build(source.lists, variant="plain", max_rules=max_rules)
 
 
 @register_backend("repair_skip", family=FAMILY_INVERTED, group="ours", paper="§4.1",
                   capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_DOC_LIST),
-                  doc="Re-Pair + skipping data (phrase sums)")
+                  doc="Re-Pair + skipping data (phrase sums)",
+                  restore=lambda arrays, max_rules=None:
+                      RePairStore.from_arrays(arrays, variant="skip"))
 def build_repair_skip(source: BuildSource, max_rules: int | None = None):
     return RePairStore.build(source.lists, variant="skip", max_rules=max_rules)
 
 
 @register_backend("repair_skip_cm", family=FAMILY_INVERTED, group="ours", paper="§4.2",
                   capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK, CAP_DOC_LIST),
-                  doc="Re-Pair skip + CM-style sampling")
+                  doc="Re-Pair skip + CM-style sampling",
+                  restore=lambda arrays, k=64:
+                      RePairStore.from_arrays(arrays, variant="skip",
+                                              sampling=("cm", k)))
 def build_repair_skip_cm(source: BuildSource, k: int = 64):
     return RePairStore.build(source.lists, variant="skip", sampling=("cm", k))
 
 
 @register_backend("repair_skip_st", family=FAMILY_INVERTED, group="ours", paper="§4.2",
                   capabilities=(CAP_DEVICE_RESIDENT, CAP_INTERSECT_CANDIDATES, CAP_SEEK, CAP_DOC_LIST),
-                  doc="Re-Pair skip + ST-style sampling")
+                  doc="Re-Pair skip + ST-style sampling",
+                  restore=lambda arrays, B=1024:
+                      RePairStore.from_arrays(arrays, variant="skip",
+                                              sampling=("st", B)))
 def build_repair_skip_st(source: BuildSource, B: int = 1024):
     return RePairStore.build(source.lists, variant="skip", sampling=("st", B))
 
@@ -141,31 +154,44 @@ def build_vbyte_lzend(source: BuildSource):
 
 
 # ----------------------------------------------------------------------
-# self-indexes (Appendix A) — token-stream backends behind the same API
+# self-indexes (Appendix A) — token-stream backends behind the same API.
+# Restore hooks rebuild the inner index from the persisted token stream
+# (the stream itself is exported by `to_arrays` via the self-index
+# extract property, so no stored text is ever required).
 # ----------------------------------------------------------------------
 @register_backend("rlcsa", family=FAMILY_SELFINDEX, group="selfindex", paper="App. A.1",
                   capabilities=SELFINDEX_CAPS,
-                  doc="run-length CSA over the token-id stream")
+                  doc="run-length CSA over the token-id stream",
+                  restore=lambda arrays, sample_rate=64:
+                      SelfIndexBackend.from_arrays(arrays, RLCSA,
+                                                   sample_rate=sample_rate))
 def build_rlcsa(source: BuildSource, sample_rate: int = 64):
     return SelfIndexBackend.build(source, RLCSA, sample_rate=sample_rate)
 
 
 @register_backend("wcsa", family=FAMILY_SELFINDEX, group="selfindex", paper="App. A.1",
                   capabilities=SELFINDEX_CAPS,
-                  doc="word-level CSA over the token-id stream")
+                  doc="word-level CSA over the token-id stream",
+                  restore=lambda arrays, sample_rate=64:
+                      SelfIndexBackend.from_arrays(arrays, WCSA,
+                                                   sample_rate=sample_rate))
 def build_wcsa(source: BuildSource, sample_rate: int = 64):
     return SelfIndexBackend.build(source, WCSA, sample_rate=sample_rate)
 
 
 @register_backend("lz77_idx", family=FAMILY_SELFINDEX, group="selfindex", paper="App. A.3",
                   capabilities=SELFINDEX_CAPS,
-                  doc="LZ77 self-index over the token-id stream")
+                  doc="LZ77 self-index over the token-id stream",
+                  restore=lambda arrays:
+                      SelfIndexBackend.from_arrays(arrays, LZ77Index))
 def build_lz77_idx(source: BuildSource):
     return SelfIndexBackend.build(source, LZ77Index)
 
 
 @register_backend("lzend_idx", family=FAMILY_SELFINDEX, group="selfindex", paper="App. A.3",
                   capabilities=SELFINDEX_CAPS,
-                  doc="LZ-End self-index over the token-id stream")
+                  doc="LZ-End self-index over the token-id stream",
+                  restore=lambda arrays:
+                      SelfIndexBackend.from_arrays(arrays, LZEndIndex))
 def build_lzend_idx(source: BuildSource):
     return SelfIndexBackend.build(source, LZEndIndex)

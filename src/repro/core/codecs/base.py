@@ -23,6 +23,8 @@ from typing import Any, Callable
 
 import numpy as np
 
+from ..registry import CAP_PERSIST
+
 CODEC_REGISTRY: dict[str, Callable[..., "Codec"]] = {}
 STORE_REGISTRY: dict[str, Callable[..., "ListStore"]] = {}
 
@@ -82,10 +84,12 @@ class ListStore:
     implementations of the intersection protocol.  The defaults decode and
     merge; backends with ``intersect_candidates`` / ``shifted_intersect``
     capabilities override exactly the method their capability names.
+    Every store persists (``to_arrays`` below), so ``persist`` is in the
+    base capability set; subclasses that redeclare the set keep it.
     """
 
     name: str = "abstract"
-    capabilities: frozenset[str] = frozenset()
+    capabilities: frozenset[str] = frozenset({CAP_PERSIST})
 
     @classmethod
     def build(cls, lists: list[np.ndarray], **kw) -> "ListStore":
@@ -144,6 +148,22 @@ class ListStore:
             li, sh = list_ids[k], shifts[k]
             cand = self.intersect_candidates(li, cand + sh) - sh
         return cand
+
+    # -- persistence (the `persist` capability) -------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Persistable components of this store, as pure arrays/bytes.
+
+        Default: the decoded posting lists in the concat layout — the
+        registered builder rebuilds the store from them deterministically
+        on ``restore_backend`` (byte-identical answers).  Stores whose
+        construction is expensive (Re-Pair grammars, self-indexes) override
+        this with their actual compiled state so opening skips the build.
+        """
+        from ..registry import lists_to_arrays
+
+        return lists_to_arrays(
+            np.asarray(self.get_list(i), dtype=np.int64)
+            for i in range(self.n_lists))
 
     @property
     def size_in_bits(self) -> int:

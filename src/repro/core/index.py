@@ -23,51 +23,17 @@ store-type switching here.
 
 from __future__ import annotations
 
-from collections.abc import Mapping
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..data.text import STOPWORDS, Vocabulary, is_word_token, tokenize
 from .registry import (
-    FAMILY_INVERTED,
     FAMILY_SELFINDEX,
     BuildSource,
-    backend_names,
     build_backend,
     get_backend_spec,
 )
-
-
-class _LegacyStoreBuilders(Mapping):
-    """Backwards-compatible view of the registry as the old
-    ``STORE_BUILDERS`` dict: ``STORE_BUILDERS[name](lists, **kw)``.
-
-    Unknown names raise ``ValueError`` (listing registered backends) instead
-    of the old bare ``KeyError``; stray kwargs raise ``ValueError`` instead
-    of a lambda ``TypeError``.
-    """
-
-    def __getitem__(self, name: str):
-        spec = get_backend_spec(name)  # unknown name -> ValueError, eagerly
-        if spec.family != FAMILY_INVERTED:
-            raise ValueError(
-                f"backend {name!r} is a {spec.family} backend; the legacy "
-                f"STORE_BUILDERS view covers inverted stores only — build "
-                f"it through NonPositionalIndex.build / PositionalIndex.build")
-        return lambda lists, **kw: build_backend(name, lists, **kw)
-
-    def __iter__(self):
-        return iter(backend_names(family=FAMILY_INVERTED))
-
-    def __len__(self) -> int:
-        return len(backend_names(family=FAMILY_INVERTED))
-
-    def __contains__(self, name) -> bool:
-        return name in backend_names(family=FAMILY_INVERTED)
-
-
-STORE_BUILDERS = _LegacyStoreBuilders()
 
 
 # ----------------------------------------------------------------------
@@ -121,6 +87,7 @@ class NonPositionalIndex(_StatsMixin):
     collection_bytes: int
     store_name: str
     doc_starts: np.ndarray | None = None  # only set for self-index backends
+    store_kw: dict = field(default_factory=dict)  # build kwargs (persisted)
 
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", case_fold: bool = True,
@@ -155,7 +122,8 @@ class NonPositionalIndex(_StatsMixin):
         built = build_backend(store, source, **store_kw)
         return cls(vocab=vocab, store=built, n_docs=len(docs),
                    collection_bytes=sum(len(d) for d in docs), store_name=store,
-                   doc_starts=doc_starts if need_stream else None)
+                   doc_starts=doc_starts if need_stream else None,
+                   store_kw=dict(store_kw))
 
     def word_id(self, w: str) -> int | None:
         return self.vocab.get(w.lower())
@@ -206,6 +174,7 @@ class PositionalIndex(_StatsMixin):
     collection_bytes: int
     store_name: str
     token_stream: np.ndarray | None = None  # kept only when keep_text=True
+    store_kw: dict = field(default_factory=dict)  # build kwargs (persisted)
 
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", keep_text: bool = False,
@@ -233,7 +202,8 @@ class PositionalIndex(_StatsMixin):
         built = build_backend(store, source, **store_kw)
         return cls(vocab=vocab, store=built, doc_starts=doc_starts, n_tokens=len(tok),
                    collection_bytes=sum(len(d) for d in docs), store_name=store,
-                   token_stream=tok if keep_text else None)
+                   token_stream=tok if keep_text else None,
+                   store_kw=dict(store_kw))
 
     def token_id(self, t: str) -> int | None:
         return self.vocab.get(t)

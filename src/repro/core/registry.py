@@ -35,6 +35,11 @@ code:
                             occurrences (grammar phrase-sum skipping for the
                             Re-Pair stores; one whole-pattern ``locate`` for
                             the self-indexes) — see ``repro.core.doclist``
+  ``persist``               the backend round-trips through the on-disk
+                            artifact format (``repro.core.artifact``):
+                            ``to_arrays()`` exports pure array/bytes
+                            components, the registered restore hook
+                            reconstructs a byte-identical backend from them
   ========================  ====================================================
 
 * :func:`register_backend` — decorator placing a builder in the registry
@@ -65,10 +70,11 @@ CAP_SHIFTED_INTERSECT = "shifted_intersect"
 CAP_DEVICE_RESIDENT = "device_resident"
 CAP_EXTRACT = "extract"
 CAP_DOC_LIST = "doc_list"
+CAP_PERSIST = "persist"
 
 ALL_CAPABILITIES = frozenset({
     CAP_SEEK, CAP_INTERSECT_CANDIDATES, CAP_SHIFTED_INTERSECT,
-    CAP_DEVICE_RESIDENT, CAP_EXTRACT, CAP_DOC_LIST,
+    CAP_DEVICE_RESIDENT, CAP_EXTRACT, CAP_DOC_LIST, CAP_PERSIST,
 })
 
 # backend families
@@ -143,6 +149,10 @@ class BackendSpec:
     defaults: dict[str, Any] = field(default_factory=dict)
     doc: str = ""
     paper: str = ""  # paper section the method comes from
+    #: restore(arrays, **store_kw) -> backend, inverting ``to_arrays()``;
+    #: None selects the generic decoded-postings rebuild (see
+    #: :func:`restore_backend`)
+    restore: Callable[..., Any] | None = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -160,18 +170,27 @@ def _ensure_builtin() -> None:
 
 
 def register_backend(name: str, *, family: str, capabilities: Iterable[str] = (),
-                     group: str = "ours", doc: str = "", paper: str = ""):
+                     group: str = "ours", doc: str = "", paper: str = "",
+                     restore: Callable[..., Any] | None = None):
     """Decorator: place ``builder(source, **kw)`` in the registry.
 
     The builder's keyword parameters (with their defaults) become the
     backend's declared build kwargs; anything else passed at build time is a
-    ``ValueError``.
+    ``ValueError``.  ``restore`` inverts the backend's ``to_arrays()``
+    export (true compiled-state reload); without one the generic
+    decoded-postings rebuild applies.  Either way the backend persists, so
+    every spec carries the ``persist`` capability.
     """
-    caps = frozenset(capabilities)
+    caps = frozenset(capabilities) | {CAP_PERSIST}
     unknown = caps - ALL_CAPABILITIES
     if unknown:
         raise ValueError(f"unknown capabilities {sorted(unknown)}; "
                          f"valid: {sorted(ALL_CAPABILITIES)}")
+    if family == FAMILY_SELFINDEX and restore is None:
+        raise ValueError(
+            f"backend {name!r}: self-index backends build from a token "
+            f"stream, not posting lists, so the generic restore path does "
+            f"not apply — pass an explicit restore hook")
 
     def deco(builder):
         params = inspect.signature(builder).parameters
@@ -186,7 +205,8 @@ def register_backend(name: str, *, family: str, capabilities: Iterable[str] = ()
         _REGISTRY[name] = BackendSpec(
             name=name, family=family, builder=builder, capabilities=caps,
             group=group, build_kwargs=kw_names, defaults=defaults,
-            doc=doc_lines[0] if doc_lines else "", paper=paper)
+            doc=doc_lines[0] if doc_lines else "", paper=paper,
+            restore=restore)
         return builder
 
     return deco
@@ -246,6 +266,63 @@ def build_backend(name: str, source: "BuildSource | list[np.ndarray]", **store_k
 def capabilities_of(backend) -> frozenset[str]:
     """The backend's declared capability set (empty when undeclared)."""
     return getattr(backend, "capabilities", frozenset())
+
+
+# ----------------------------------------------------------------------
+# persistence: to_arrays() export / restore_backend() reload
+# ----------------------------------------------------------------------
+def lists_to_arrays(lists: Iterable[np.ndarray]) -> dict[str, np.ndarray]:
+    """Pack posting lists into the two-array concat layout the generic
+    persistence path stores (``postings`` + ``offsets``)."""
+    lists = [np.asarray(l, dtype=np.int64) for l in lists]
+    offsets = np.zeros(len(lists) + 1, dtype=np.int64)
+    for i, l in enumerate(lists):
+        offsets[i + 1] = offsets[i] + len(l)
+    concat = (np.concatenate(lists) if lists else np.zeros(0, dtype=np.int64))
+    return {"postings": concat, "offsets": offsets}
+
+
+def lists_from_arrays(arrays: dict) -> list[np.ndarray]:
+    """Inverse of :func:`lists_to_arrays`."""
+    concat = np.asarray(arrays["postings"], dtype=np.int64)
+    offsets = np.asarray(arrays["offsets"], dtype=np.int64)
+    return [concat[int(offsets[i]):int(offsets[i + 1])]
+            for i in range(len(offsets) - 1)]
+
+
+def backend_arrays(name: str, backend) -> dict:
+    """The backend's persistable components via ``to_arrays()`` —
+    ``ListStore`` supplies the generic decoded-postings default, so every
+    registered backend exports; a protocol-only custom backend must
+    implement it to persist."""
+    get_backend_spec(name)  # unknown name -> ValueError up front
+    if not hasattr(backend, "to_arrays"):
+        raise ValueError(
+            f"backend {name!r} ({type(backend).__name__}) exports no "
+            f"persistable arrays — inherit ListStore or implement "
+            f"to_arrays()")
+    return backend.to_arrays()
+
+
+def restore_backend(name: str, arrays: dict, **store_kw):
+    """Reconstruct backend ``name`` from its persisted component arrays.
+
+    Backends registered with a ``restore`` hook reload their compiled state
+    directly (no recompression); everything else rebuilds through the
+    registered builder from the stored posting lists — deterministic, so
+    the restored backend answers byte-identically either way.
+    """
+    spec = get_backend_spec(name)
+    bad = set(store_kw) - set(spec.build_kwargs)
+    if bad:
+        accepted = ", ".join(spec.build_kwargs) or "(none)"
+        raise ValueError(
+            f"backend {name!r} got unexpected build kwargs {sorted(bad)}; "
+            f"accepted: {accepted}")
+    if spec.restore is not None:
+        return spec.restore(arrays, **store_kw)
+    source = BuildSource(lists=lists_from_arrays(arrays))
+    return spec.builder(source, **store_kw)
 
 
 # ----------------------------------------------------------------------

@@ -24,7 +24,13 @@ import numpy as np
 
 from .codecs.base import ListStore, register_store
 from .dgaps import to_dgaps
-from .registry import CAP_DEVICE_RESIDENT, CAP_DOC_LIST, CAP_INTERSECT_CANDIDATES, CAP_SEEK
+from .registry import (
+    CAP_DEVICE_RESIDENT,
+    CAP_DOC_LIST,
+    CAP_INTERSECT_CANDIDATES,
+    CAP_PERSIST,
+    CAP_SEEK,
+)
 
 DEAD = np.int64(-(1 << 62))
 
@@ -283,7 +289,7 @@ class RePairStore(ListStore):
         # sampled seeks are per-variant.  Phrase sums also bound the absolute
         # range of every compressed phrase, which is what the grammar-aware
         # document-listing walk needs (repro.core.doclist.grammar_doc_runs)
-        caps = {CAP_DEVICE_RESIDENT, CAP_DOC_LIST}
+        caps = {CAP_DEVICE_RESIDENT, CAP_DOC_LIST, CAP_PERSIST}
         if variant == "skip":
             caps.add(CAP_INTERSECT_CANDIDATES)
         if sampling is not None:
@@ -332,6 +338,35 @@ class RePairStore(ListStore):
             c_offsets[i + 1] = c_offsets[i] + len(piece)
         c = np.concatenate(pieces) if pieces else np.zeros(0, dtype=np.int64)
         return cls(c, c_offsets, lengths, packed, variant, sampling, memoize)
+
+    # ------------------------------------------------------------------
+    # persistence: the compiled grammar state round-trips as pure arrays,
+    # so `restore_backend` reloads without re-running Re-Pair compression
+    # ------------------------------------------------------------------
+    _PACKED_FIELDS = ("rb", "rs", "rs_leaf", "rank0", "rule_pos",
+                      "pos_sorted", "rule_by_pos", "sums", "lens", "depth")
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        out = {"c": self.c, "c_offsets": self.c_offsets,
+               "lengths": self.lengths,
+               "u": np.asarray([self.packed.u], dtype=np.int64)}
+        for f in self._PACKED_FIELDS:
+            out["packed_" + f] = getattr(self.packed, f)
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays: dict, variant: str = "skip",
+                    sampling: tuple[str, int] | None = None,
+                    memoize: bool = False) -> "RePairStore":
+        fields = {f: np.asarray(arrays["packed_" + f],
+                                dtype=np.uint8 if f == "rb" else np.int64)
+                  for f in cls._PACKED_FIELDS}
+        packed = PackedRules(u=int(np.asarray(arrays["u"])[0]), **fields,
+                             max_depth=int(fields["depth"].max(initial=0)))
+        return cls(np.asarray(arrays["c"], dtype=np.int64),
+                   np.asarray(arrays["c_offsets"], dtype=np.int64),
+                   np.asarray(arrays["lengths"], dtype=np.int64),
+                   packed, variant, sampling, memoize)
 
     # ------------------------------------------------------------------
     # expansion

@@ -16,12 +16,12 @@ import numpy as np
 from .codecs.base import ListStore, register_store
 from .codecs.vbyte import vbyte_decode_array, vbyte_encode_array
 from .dgaps import to_dgaps
-from .registry import CAP_INTERSECT_CANDIDATES, CAP_SEEK
+from .registry import CAP_INTERSECT_CANDIDATES, CAP_PERSIST, CAP_SEEK
 
 
 @register_store("vbyte_sampled")
 class SampledVByteStore(ListStore):
-    capabilities = frozenset({CAP_SEEK, CAP_INTERSECT_CANDIDATES})
+    capabilities = frozenset({CAP_SEEK, CAP_INTERSECT_CANDIDATES, CAP_PERSIST})
 
     def __init__(self, entries: list[dict], universe: int, kind: str, param: int, bitmaps: bool):
         self.entries = entries

@@ -23,13 +23,20 @@ from __future__ import annotations
 import numpy as np
 
 from ..codecs.base import ListStore
-from ..registry import CAP_DOC_LIST, CAP_EXTRACT, CAP_SHIFTED_INTERSECT, BuildSource
+from ..registry import (
+    CAP_DOC_LIST,
+    CAP_EXTRACT,
+    CAP_PERSIST,
+    CAP_SHIFTED_INTERSECT,
+    BuildSource,
+)
 
 
 class SelfIndexBackend(ListStore):
     # doc_list: a whole pattern is one native `locate`, so document listing
     # is locate + reduce — no per-term posting intersection is ever needed
-    capabilities = frozenset({CAP_SHIFTED_INTERSECT, CAP_EXTRACT, CAP_DOC_LIST})
+    capabilities = frozenset({CAP_SHIFTED_INTERSECT, CAP_EXTRACT, CAP_DOC_LIST,
+                              CAP_PERSIST})
 
     def __init__(self, inner, lengths: np.ndarray, doc_starts: np.ndarray | None = None,
                  doc_lists: bool = False, exclude_ids: frozenset[int] = frozenset()):
@@ -54,6 +61,33 @@ class SelfIndexBackend(ListStore):
         return cls(inner, lengths,
                    doc_starts=source.doc_starts if source.doc_lists else None,
                    doc_lists=source.doc_lists, exclude_ids=exclude)
+
+    # ------------------------------------------------------------------
+    # persistence: the token stream is recoverable from the index (the
+    # self-index property), so the artifact stores it plus the planning
+    # metadata; restore rebuilds the inner index from the stream
+    # ------------------------------------------------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        n = int(self.inner.n)
+        stream = (self.inner.extract(0, n - 1) if n
+                  else np.zeros(0, dtype=np.int64))
+        out = {"stream": np.asarray(stream, dtype=np.int64),
+               "lengths": self.lengths,
+               "doc_lists": np.asarray([int(self.doc_lists)], dtype=np.int64),
+               "exclude_ids": np.asarray(sorted(self.exclude_ids), dtype=np.int64)}
+        if self.doc_starts is not None:
+            out["doc_starts"] = self.doc_starts
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays: dict, index_cls, **kw) -> "SelfIndexBackend":
+        inner = index_cls(np.asarray(arrays["stream"], dtype=np.int64), **kw)
+        doc_starts = arrays.get("doc_starts")
+        return cls(inner, np.asarray(arrays["lengths"], dtype=np.int64),
+                   doc_starts=doc_starts,
+                   doc_lists=bool(np.asarray(arrays["doc_lists"])[0]),
+                   exclude_ids=frozenset(
+                       int(x) for x in np.asarray(arrays["exclude_ids"])))
 
     # ------------------------------------------------------------------
     def _positions_to_docs(self, pos: np.ndarray) -> np.ndarray:

@@ -1,12 +1,20 @@
-"""Serving driver: build the compressed indexes over a collection and serve
-batched word / AND / phrase / top-k / document-listing traffic through one
-plan-compiled :class:`~repro.serving.session.Session` (host operators +
-jitted anchored device paths, windowed-exact, plan-cached).
+"""Serving driver: build (or reopen) the compressed indexes over a
+collection and serve batched word / AND / phrase / top-k / document-listing
+traffic through one plan-compiled :class:`~repro.serving.session.Session`
+(host operators + jitted anchored device paths, windowed-exact,
+plan-cached).
+
+The index lifecycle flags cover build→persist→open→serve→ingest:
+``--save-dir`` writes the collection through a segmented
+:class:`~repro.core.writer.IndexWriter` (``--commits`` batches);
+``--index-dir`` opens a persisted artifact or writer directory instead of
+rebuilding; ``--ingest N`` commits a batch of N new version documents
+against the live directory and refreshes the running session in place.
 
     PYTHONPATH=src python -m repro.launch.serve --articles 10 --queries 64
-    PYTHONPATH=src python -m repro.launch.serve --mode phrase --terms 3
     PYTHONPATH=src python -m repro.launch.serve --mode mixed --probe kernel
-    PYTHONPATH=src python -m repro.launch.serve --mode docs-phrase --explain
+    PYTHONPATH=src python -m repro.launch.serve --save-dir /tmp/ix --commits 4
+    PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/ix --ingest 8
 """
 
 from __future__ import annotations
@@ -18,6 +26,7 @@ import numpy as np
 
 from ..core.index import NonPositionalIndex, PositionalIndex
 from ..core.registry import backend_names, get_backend_spec
+from ..core.writer import IndexWriter
 from ..data import generate_collection
 from ..data.queries import sample_traffic
 from ..serving.session import Session
@@ -38,34 +47,75 @@ def main() -> None:
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--explain", action="store_true",
                     help="print the physical plan of one query per distinct shape")
+    ap.add_argument("--save-dir", type=str, default=None,
+                    help="persist the build as a segmented writer directory "
+                         "and serve from disk")
+    ap.add_argument("--commits", type=int, default=1,
+                    help="number of IndexWriter commits --save-dir splits "
+                         "the collection into")
+    ap.add_argument("--index-dir", type=str, default=None,
+                    help="open a persisted artifact / writer directory "
+                         "instead of rebuilding")
+    ap.add_argument("--ingest", type=int, default=0, metavar="N",
+                    help="after serving, commit N new version documents "
+                         "against the live directory and re-serve")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.ingest and not (args.index_dir or args.save_dir):
+        ap.error("--ingest needs a live directory (--index-dir or --save-dir)")
 
     spec = get_backend_spec(args.store)
     print(f"backend {spec.name}: family={spec.family} "
           f"caps=[{','.join(sorted(spec.capabilities)) or '-'}]")
     col = generate_collection(n_articles=args.articles, versions_per_article=args.versions,
                               words_per_doc=200, seed=args.seed)
-    t0 = time.perf_counter()
-    idx = NonPositionalIndex.build(col.docs, store=args.store)
-    print(f"built {args.store} non-positional index over {col.n_docs} docs "
-          f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
     # non-phrase docs: serves from the non-positional index; only phrase
     # listing and tf ranking need the positional one
     need_positional = args.mode in ("phrase", "mixed", "docs-phrase", "docs-topk")
-    pidx = None
-    if need_positional:
-        t0 = time.perf_counter()
-        pidx = PositionalIndex.build(col.docs, store=args.store)
-        print(f"built {args.store} positional index ({100 * pidx.space_fraction:.3f}% "
-              f"of collection) in {time.perf_counter()-t0:.2f}s")
 
-    # Session.build attaches device servers except for self-indexes (their
-    # native locate serves whole patterns on the host)
-    session = Session.build(idx, positional=pidx, probe=args.probe)
+    if args.index_dir:
+        t0 = time.perf_counter()
+        session = Session.open(args.index_dir, probe=args.probe)
+        m = session.metrics()
+        print(f"opened {args.index_dir} ({m.get('segments', 1)} segment(s)) "
+              f"in {time.perf_counter()-t0:.2f}s — no rebuild")
+        live_dir = args.index_dir
+    elif args.save_dir:
+        from ..core.writer import is_writer_dir
+
+        if is_writer_dir(args.save_dir):
+            ap.error(f"--save-dir {args.save_dir} already holds a writer — "
+                     f"serve it with --index-dir (and grow it with "
+                     f"--ingest) or pick a fresh directory")
+        writer = IndexWriter(args.save_dir, store=args.store, positional=True)
+        per = max(1, -(-col.n_docs // max(1, args.commits)))
+        t0 = time.perf_counter()
+        for c in range(0, col.n_docs, per):
+            writer.add_documents(col.docs[c:c + per])
+            seg = writer.commit()
+            print(f"committed {seg.name}: {seg.n_docs} docs at base {seg.doc_base}")
+        print(f"persisted {len(writer.segments)} segment(s) to {args.save_dir} "
+              f"in {time.perf_counter()-t0:.2f}s")
+        session = Session.open(args.save_dir, probe=args.probe)
+        live_dir = args.save_dir
+    else:
+        t0 = time.perf_counter()
+        idx = NonPositionalIndex.build(col.docs, store=args.store)
+        print(f"built {args.store} non-positional index over {col.n_docs} docs "
+              f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
+        pidx = None
+        if need_positional:
+            t0 = time.perf_counter()
+            pidx = PositionalIndex.build(col.docs, store=args.store)
+            print(f"built {args.store} positional index ({100 * pidx.space_fraction:.3f}% "
+                  f"of collection) in {time.perf_counter()-t0:.2f}s")
+        # Session.build attaches device servers except for self-indexes (their
+        # native locate serves whole patterns on the host)
+        session = Session.build(idx, positional=pidx, probe=args.probe)
+        live_dir = None
 
     rng = np.random.default_rng(args.seed)
-    words = [w for w in idx.vocab.id_to_token[:300]]
+    words = [w for w in session.primary_index.vocab.id_to_token[:300]]
     queries = sample_traffic(args.mode, args.queries, col.docs, words, rng,
                              n_terms=args.terms)
     by_route: dict[str, int] = {}
@@ -83,7 +133,8 @@ def main() -> None:
         print()
 
     # host-only baseline (no device servers, same plan compiler)
-    host_session = Session(idx, positional=pidx)
+    host_session = (Session.open(live_dir, device=False) if live_dir
+                    else Session(idx, positional=pidx))
     t0 = time.perf_counter()
     host_results = host_session.execute(queries)
     dt = time.perf_counter() - t0
@@ -109,6 +160,31 @@ def main() -> None:
     agree = sum(1 for h, d in zip(host_results, results)
                 if np.array_equal(np.asarray(h), np.asarray(d)))
     print(f"host/planned agreement: {agree}/{args.queries} queries")
+
+    if args.ingest:
+        # commit a new version batch against the live directory, then
+        # refresh the running session in place — no rebuild, no restart
+        new_docs = generate_collection(
+            n_articles=1, versions_per_article=args.ingest,
+            words_per_doc=200, seed=args.seed + 1).docs
+        writer = IndexWriter.open(live_dir)
+        t0 = time.perf_counter()
+        writer.add_documents(new_docs)
+        seg = writer.commit()
+        commit_s = time.perf_counter() - t0
+        opened = session.refresh()
+        print(f"ingested {seg.name}: {seg.n_docs} docs at base {seg.doc_base} "
+              f"(commit {commit_s:.2f}s, {opened} segment(s) opened live)")
+        before = session.metrics()
+        t0 = time.perf_counter()
+        session.execute(queries)
+        dt = time.perf_counter() - t0
+        after = session.metrics()
+        print(f"post-ingest batch: {1e3 * dt / args.queries:.2f} ms/query "
+              f"({args.queries / dt:.0f} q/s); "
+              f"{after['plans_compiled'] - before['plans_compiled']} re-plans "
+              f"(segment shape changed), total segments "
+              f"{after.get('segments', 1)}")
 
 
 if __name__ == "__main__":

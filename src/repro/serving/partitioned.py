@@ -209,6 +209,19 @@ class PartitionedServer:
         if self._c_offsets_np is None:
             self._c_offsets_np = np.asarray(self.pidx.arrays["c_offsets"])
 
+    @classmethod
+    def open(cls, path, n_shards: int, mesh=None, shard_axis: str = "data",
+             **kw) -> "PartitionedServer":
+        """Open a persisted index artifact (``repro.core.artifact``) and
+        shard it: each shard re-anchors its document range of the reopened
+        backend's postings, so a persisted single-machine artifact serves
+        a sharded layout without rebuilding the index."""
+        from ..core.artifact import open_index
+
+        index = open_index(path)
+        pidx = PartitionedAnchoredIndex.from_index(index, n_shards=n_shards, **kw)
+        return cls(pidx=pidx, host_index=index, mesh=mesh, shard_axis=shard_axis)
+
     @property
     def trace_count(self) -> int:
         return self.trace_events

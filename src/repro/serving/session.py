@@ -27,14 +27,28 @@ surfaces remain as thin shims over a ``Session`` for one PR (they emit a
     results = sess.execute(["w1 w2", '"a b"', "top5: w1 w2"])
     print(sess.explain('docs: "a b"'))
     print(sess.metrics())   # plan-cache hit rate, jit trace count, ...
+
+**Persistence + segments.** :meth:`Session.open` serves a persisted
+artifact instead of rebuilding: a single-index artifact directory
+(``repro.core.artifact``) opens into a plain session; an
+:class:`~repro.core.writer.IndexWriter` directory opens **segment-aware**
+— one child session per immutable segment, every query kind executed on
+each segment and merged on the recorded doc-id / token offsets (top-k via
+per-segment k then global re-rank; doc listing via offset-shifted
+per-segment dedup).  Plan-cache keys extend with the segment shape, so a
+repeated traffic mix on a segmented collection still reports zero
+re-plans and zero re-traces; :meth:`refresh` picks up segments committed
+by a live writer (``--ingest``) without a restart.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
+from ..core.artifact import MANIFEST_NAME, ArtifactError, open_index
 from ..core.doclist import (
     DocRunIndex,
     doc_list_terms,
@@ -43,6 +57,7 @@ from ..core.doclist import (
     rank_docs,
 )
 from ..core.index import NonPositionalIndex, PositionalIndex
+from ..core.writer import IndexWriter, is_writer_dir
 from .plan import (
     AND,
     DOCS,
@@ -62,6 +77,16 @@ from .plan import (
 
 
 @dataclass
+class _Segment:
+    """One opened immutable segment: its child session + global offsets."""
+
+    session: "Session"
+    name: str
+    doc_base: int
+    token_base: int
+
+
+@dataclass
 class Session:
     """One serving session: indexes + device servers + plan cache."""
 
@@ -73,6 +98,9 @@ class Session:
     def __post_init__(self):
         self._plan_cache: dict[tuple, Route] = {}
         self._doc_run_index: DocRunIndex | None = None
+        self._segments: list[_Segment] = []
+        self._source_path: Path | None = None
+        self._open_kw: dict = {}
         self.plans_compiled = 0
         self.plan_cache_hits = 0
         self.queries_executed = 0
@@ -103,16 +131,102 @@ class Session:
                 positional, expand_len=expand_len, probe=probe)
                 if attach(positional) else None))
 
+    # -- persisted artifacts / segmented collections --------------------
+    @classmethod
+    def open(cls, path, device: bool = True, probe: str = "vmap",
+             expand_len: int = 32) -> "Session":
+        """Serve a persisted index instead of rebuilding.
+
+        ``path`` is either one artifact directory (``manifest.json``), a
+        segment bundle (``nonpositional/`` / ``positional/`` artifact
+        subdirectories), or an :class:`~repro.core.writer.IndexWriter`
+        directory — the latter opens segment-aware: one child session per
+        segment, answers merged on the manifest's doc/token offsets.
+        """
+        p = Path(path)
+        open_kw = dict(device=device, probe=probe, expand_len=expand_len)
+        if is_writer_dir(p):
+            sess = cls()
+            sess._source_path = p
+            sess._open_kw = open_kw
+            if sess.refresh() == 0:
+                raise ArtifactError(
+                    f"writer at {p} has no committed segments — "
+                    f"add_documents + commit before serving it")
+            return sess
+        if (p / MANIFEST_NAME).is_file():
+            ix = open_index(p)
+            if isinstance(ix, PositionalIndex):
+                return cls.build(None, positional=ix, **open_kw)
+            return cls.build(ix, **open_kw)
+        npdir, posdir = p / "nonpositional", p / "positional"
+        if npdir.is_dir() or posdir.is_dir():
+            return cls.build(
+                open_index(npdir) if npdir.is_dir() else None,
+                positional=open_index(posdir) if posdir.is_dir() else None,
+                **open_kw)
+        raise ArtifactError(
+            f"nothing to open at {p}: expected an index artifact "
+            f"({MANIFEST_NAME}), a segment bundle, or a writer directory")
+
+    def refresh(self) -> int:
+        """Re-read the writer manifest and open segments committed since
+        (a compaction replaces the whole set).  Returns the number of
+        newly opened segments; open sessions for untouched segments — and
+        their plan caches / traced device steps — are reused."""
+        if self._source_path is None:
+            raise ValueError("refresh() requires a session opened from a "
+                             "writer directory (Session.open)")
+        writer = IndexWriter.open(self._source_path)
+        current = {s.name: s for s in self._segments}
+        live = [m.name for m in writer.segments]
+        if [s.name for s in self._segments] != live[:len(self._segments)]:
+            current = {}  # compacted / rewritten: reopen everything
+        fresh: list[_Segment] = []
+        opened = 0
+        for meta in writer.segments:
+            seg = current.get(meta.name)
+            if seg is None:
+                np_idx, pos_idx = writer.open_segment(meta)
+                seg = _Segment(
+                    session=Session.build(np_idx, positional=pos_idx,
+                                          **self._open_kw),
+                    name=meta.name, doc_base=meta.doc_base,
+                    token_base=meta.token_base)
+                opened += 1
+            fresh.append(seg)
+        self._segments = fresh
+        return opened
+
+    @property
+    def segment_shape(self) -> tuple:
+        """Shape component of segmented plan-cache keys (empty for plain
+        sessions, so single-index keys are unchanged)."""
+        return (len(self._segments),) if self._segments else ()
+
+    @property
+    def primary_index(self) -> NonPositionalIndex | None:
+        """The non-positional index behind this session (the first
+        segment's for segmented sessions) — vocabulary / stats access for
+        drivers that sample traffic."""
+        if self._segments:
+            return self._segments[0].session.index
+        return self.index
+
     # -- planning -------------------------------------------------------
     def plan(self, q, prefer_device: bool = True) -> Route:
-        """The (cached) routing decision for one query shape."""
+        """The (cached) routing decision for one query shape.  Segmented
+        sessions route against the first segment's context with the cache
+        key extended by :attr:`segment_shape`, so a commit that changes
+        the segment count re-plans while steady traffic never does."""
         pq = parse_query(q)
+        ctx = self._segments[0].session if self._segments else self
         if not prefer_device:  # off-path (diagnostics): don't pollute the cache
-            return route_query(self, pq, prefer_device=False)
-        key = plan_key(self, pq)
+            return route_query(ctx, pq, prefer_device=False)
+        key = plan_key(ctx, pq) + self.segment_shape
         rt = self._plan_cache.get(key)
         if rt is None:
-            rt = route_query(self, pq)
+            rt = route_query(ctx, pq)
             self._plan_cache[key] = rt
             self.plans_compiled += 1
         else:
@@ -122,33 +236,54 @@ class Session:
     def explain(self, q, fmt: str = "text", extract: int | None = None):
         """The costed physical plan for ``q`` — ``fmt="text"`` (operator
         tree, one node per line) or ``"json"`` (nested dict).  Does not
-        execute the query and does not touch the execution counters."""
+        execute the query and does not touch the execution counters.  On a
+        segmented session the plan shown is the per-segment plan (every
+        segment runs the same shape; answers merge on offsets)."""
         raw = q if isinstance(q, str) else None
-        cq = compile_query(self, q, extract=extract)
+        ctx = self._segments[0].session if self._segments else self
+        cq = compile_query(ctx, q, extract=extract)
         if fmt == "json":
-            return explain_json(cq, raw=raw)
+            out = explain_json(cq, raw=raw)
+            if self._segments:
+                out["segments"] = len(self._segments)
+            return out
         if fmt != "text":
             raise ValueError(f"unknown explain format {fmt!r}; use 'text' or 'json'")
-        return explain_text(cq, raw=raw)
+        text = explain_text(cq, raw=raw)
+        if self._segments:
+            text = (f"segments: {len(self._segments)} (per-segment plan "
+                    f"below; answers merge on doc/token offsets)\n" + text)
+        return text
 
     # -- metrics --------------------------------------------------------
     @property
     def jit_traces(self) -> int:
-        """Total device-step traces across the attached servers (a retrace
-        is a compile — the quantity the plan/batch bucketing minimizes)."""
-        return sum(int(getattr(s, "trace_count", 0))
-                   for s in (self.server, self.positional_server) if s is not None)
+        """Total device-step traces across the attached servers — own and
+        per-segment (a retrace is a compile — the quantity the plan/batch
+        bucketing minimizes)."""
+        own = sum(int(getattr(s, "trace_count", 0))
+                  for s in (self.server, self.positional_server) if s is not None)
+        return own + sum(seg.session.jit_traces for seg in self._segments)
 
     def metrics(self) -> dict:
-        total = self.plans_compiled + self.plan_cache_hits
-        return {
+        compiled, hits = self.plans_compiled, self.plan_cache_hits
+        device_batches = self.device_batches
+        for seg in self._segments:
+            compiled += seg.session.plans_compiled
+            hits += seg.session.plan_cache_hits
+            device_batches += seg.session.device_batches
+        total = compiled + hits
+        out = {
             "queries_executed": self.queries_executed,
-            "device_batches": self.device_batches,
-            "plans_compiled": self.plans_compiled,
-            "plan_cache_hits": self.plan_cache_hits,
-            "plan_cache_hit_rate": round(self.plan_cache_hits / total, 4) if total else 0.0,
+            "device_batches": device_batches,
+            "plans_compiled": compiled,
+            "plan_cache_hits": hits,
+            "plan_cache_hit_rate": round(hits / total, 4) if total else 0.0,
             "jit_traces": self.jit_traces,
         }
+        if self._segments:
+            out["segments"] = len(self._segments)
+        return out
 
     # -- execution ------------------------------------------------------
     def execute(self, queries):
@@ -157,10 +292,18 @@ class Session:
         the original order).  Device-routed queries are grouped by
         physical-plan shape so each shape runs as one padded jit-stable
         device batch; host-routed queries run through the
-        capability-selected operators."""
+        capability-selected operators.  Segmented sessions run the whole
+        batch on every segment and merge per query kind on the segment
+        offsets."""
         single = isinstance(queries, (str, ParsedQuery))
         batch = [queries] if single else list(queries)
         parsed = [parse_query(q) for q in batch]
+        if self._segments:
+            for pq in parsed:
+                self.plan(pq)  # warm/count the segment-shape route cache
+            self.queries_executed += len(batch)
+            out = self._execute_segmented(parsed)
+            return out[0] if single else out
         routes = [self.plan(pq) for pq in parsed]
         self.queries_executed += len(batch)
         out: list[np.ndarray | None] = [None] * len(batch)
@@ -186,6 +329,70 @@ class Session:
             for i, r in zip(idxs, res):
                 out[i] = r
         return out[0] if single else out
+
+    # -- segment-aware merge (doc ids shift by doc_base, positions by
+    # token_base; a document lives in exactly one segment, so per-doc
+    # scores are complete within their segment and per-segment top-k
+    # followed by a global re-rank is exact) ----------------------------
+    def _execute_segmented(self, parsed: list[ParsedQuery]) -> list[np.ndarray]:
+        scored_idx = [i for i, pq in enumerate(parsed)
+                      if pq.kind == DOCS_TOPK]
+        plain_idx = [i for i, pq in enumerate(parsed) if pq.kind != DOCS_TOPK]
+        per_seg: list[list[np.ndarray]] = [[] for _ in parsed]
+        scores: list[list[np.ndarray]] = [[] for _ in parsed]
+        for seg in self._segments:
+            child = seg.session
+            if plain_idx:
+                child_out = child.execute([parsed[i] for i in plain_idx])
+                for i, res in zip(plain_idx, child_out):
+                    res = np.asarray(res)
+                    base = (seg.token_base if parsed[i].kind == PHRASE
+                            else seg.doc_base)
+                    per_seg[i].append(res + base if len(res) else res)
+            for i in scored_idx:
+                pq = parsed[i]
+                docs, tf = child._doc_topk_scored(
+                    list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
+                per_seg[i].append(docs + seg.doc_base if len(docs) else docs)
+                scores[i].append(tf)
+        out: list[np.ndarray] = []
+        for i, pq in enumerate(parsed):
+            parts = per_seg[i]
+            merged = (np.concatenate(parts) if parts
+                      else np.zeros(0, dtype=np.int64)).astype(np.int64)
+            if pq.kind == TOPK:
+                merged = merged[: pq.k or 10]  # per-segment prefixes, re-cut
+            elif pq.kind == DOCS_TOPK:
+                tf = (np.concatenate(scores[i]) if scores[i]
+                      else np.zeros(0, dtype=np.int64))
+                merged = rank_docs(merged, tf, pq.k or 10)
+            out.append(merged)
+        return out
+
+    def _doc_topk_scored(self, terms: list[str], k: int = 10,
+                         phrase: bool = False) -> tuple[np.ndarray, np.ndarray]:
+        """Top-``k`` docs by pattern frequency *with their scores* — the
+        per-segment half of the segmented ``docs-top<k>`` merge."""
+        docs = self._doc_list(terms, phrase=phrase)
+        if len(docs) == 0:
+            return docs, np.zeros(0, dtype=np.int64)
+        if self.positional is None:
+            docs = docs[:k]
+            return docs, np.ones(len(docs), dtype=np.int64)
+        if phrase and len(terms) > 1:
+            pdocs, counts = positions_to_doc_counts(self._phrase(terms),
+                                                    self.positional.doc_starts)
+        else:
+            runs = self.doc_runs()
+            pdocs, counts = docs, np.zeros(len(docs), dtype=np.int64)
+            for t in terms:
+                tid = self.positional.lookup(t)
+                if tid is not None:
+                    counts = counts + runs.term_frequencies(tid, docs)
+        top = rank_docs(pdocs, counts, k)
+        pos = {int(d): i for i, d in enumerate(pdocs.tolist())}
+        return top, np.asarray([counts[pos[int(d)]] for d in top.tolist()],
+                               dtype=np.int64)
 
     def _execute_host(self, pq: ParsedQuery) -> np.ndarray:
         if not pq.terms:  # defensive: manually built ParsedQuery
@@ -279,24 +486,8 @@ class Session:
         ties broken by lowest doc id.  Frequencies come from the positional
         doc-run structure; without a positional index every document counts
         once and the ranking degenerates to doc-id order."""
-        terms = list(terms)
-        docs = self._doc_list(terms, phrase=phrase)
-        if len(docs) == 0:
-            return docs
-        k = k or 10
-        if self.positional is None:
-            return docs[:k]
-        if phrase and len(terms) > 1:
-            pdocs, counts = positions_to_doc_counts(self._phrase(terms),
-                                                    self.positional.doc_starts)
-            return rank_docs(pdocs, counts, k)
-        runs = self.doc_runs()
-        scores = np.zeros(len(docs), dtype=np.int64)
-        for t in terms:
-            tid = self.positional.lookup(t)
-            if tid is not None:
-                scores += runs.term_frequencies(tid, docs)
-        return rank_docs(docs, scores, k)
+        docs, _ = self._doc_topk_scored(list(terms), k=k or 10, phrase=phrase)
+        return docs
 
     # -- snippet extraction (the Extract logical operator) --------------
     def extract(self, q, context: int = 2) -> list[np.ndarray]:
@@ -308,6 +499,11 @@ class Session:
         pq = parse_query(q)
         if pq.kind not in (WORD, PHRASE):
             raise ValueError(f"extract serves word/phrase queries, not {pq.kind}")
+        if self._segments:
+            out: list[np.ndarray] = []
+            for seg in self._segments:  # occurrences in global order
+                out.extend(seg.session.extract(pq, context=context))
+            return out
         if self.positional is None:
             raise ValueError("extract requires a PositionalIndex")
         pos = np.asarray(self.positional.query_phrase(list(pq.terms)))

@@ -1,0 +1,168 @@
+"""Index lifecycle unit tests: artifact format, writer, error paths.
+
+The differential suite asserts the byte-identity acceptance criteria; this
+module locks the lifecycle mechanics — manifest/checksum gating (a
+corrupted blob names the bad component), writer resume/config pinning,
+and the Session.open surface.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import (
+    ArtifactError,
+    open_index,
+    read_manifest,
+    save_index,
+)
+from repro.core.index import NonPositionalIndex, PositionalIndex
+from repro.core.writer import IndexWriter, is_writer_dir
+from repro.serving.session import Session
+
+DOCS = ["alpha beta gamma delta", "beta gamma epsilon", "alpha beta beta zeta",
+        "gamma delta epsilon zeta", "alpha zeta", "beta delta gamma"]
+
+
+@pytest.fixture()
+def artifact(tmp_path):
+    idx = NonPositionalIndex.build(DOCS, store="vbyte")
+    return save_index(idx, tmp_path / "np"), idx
+
+
+# ----------------------------------------------------------------------
+# artifact format + corruption gating
+# ----------------------------------------------------------------------
+def test_manifest_records_components_and_checksums(artifact):
+    root, _ = artifact
+    m = read_manifest(root)
+    assert m["kind"] == "nonpositional" and m["store"] == "vbyte"
+    assert "vocab" in m["components"]
+    for name, entry in m["components"].items():
+        assert (root / entry["file"]).is_file(), name
+        assert len(entry["sha256"]) == 64
+
+
+def test_corrupted_blob_names_the_component(artifact):
+    root, _ = artifact
+    m = read_manifest(root)
+    name = next(n for n in m["components"] if n.startswith("store."))
+    blob = root / m["components"][name]["file"]
+    payload = blob.read_bytes()
+    blob.write_bytes(payload[:-1] + bytes([payload[-1] ^ 0xFF]))
+    with pytest.raises(ArtifactError, match=f"checksum mismatch in component '{name}'"):
+        open_index(root)
+
+
+def test_missing_component_blob_is_named(artifact):
+    root, _ = artifact
+    m = read_manifest(root)
+    (root / m["components"]["vocab"]["file"]).unlink()
+    with pytest.raises(ArtifactError, match="missing component 'vocab'"):
+        open_index(root)
+
+
+def test_unknown_format_version_rejected(artifact):
+    root, _ = artifact
+    m = json.loads((root / "manifest.json").read_text())
+    m["format_version"] = 99
+    (root / "manifest.json").write_text(json.dumps(m))
+    with pytest.raises(ArtifactError, match="format_version 99"):
+        open_index(root)
+
+
+def test_open_nonexistent_path_is_artifact_error(tmp_path):
+    with pytest.raises(ArtifactError, match="manifest.json not found"):
+        open_index(tmp_path / "nope")
+    with pytest.raises(ArtifactError, match="nothing to open"):
+        Session.open(tmp_path)
+
+
+def test_open_writer_without_commits_is_artifact_error(tmp_path):
+    IndexWriter(tmp_path / "ix", store="vbyte")  # manifest, no segments
+    with pytest.raises(ArtifactError, match="no committed segments"):
+        Session.open(tmp_path / "ix")
+
+
+def test_positional_roundtrip_keeps_stream_and_stats(tmp_path):
+    pidx = PositionalIndex.build(DOCS, store="rice_runs", keep_text=True)
+    got = open_index(save_index(pidx, tmp_path / "pos"))
+    assert np.array_equal(got.token_stream, pidx.token_stream)
+    assert np.array_equal(got.doc_starts, pidx.doc_starts)
+    assert got.stats() == pidx.stats()
+    assert got.size_in_bits == pidx.size_in_bits
+
+
+# ----------------------------------------------------------------------
+# writer: resume, config pinning, commit/compact bookkeeping
+# ----------------------------------------------------------------------
+def test_writer_commit_requires_documents(tmp_path):
+    w = IndexWriter(tmp_path / "ix", store="vbyte")
+    with pytest.raises(ValueError, match="nothing to commit"):
+        w.commit()
+    with pytest.raises(ValueError, match="nothing to compact"):
+        w.compact()
+
+
+def test_writer_resume_pins_configuration(tmp_path):
+    w = IndexWriter(tmp_path / "ix", store="vbyte_cm", k=8)
+    w.add_documents(DOCS[:3])
+    w.commit()
+    assert is_writer_dir(tmp_path / "ix")
+    with pytest.raises(ValueError, match="share one configuration"):
+        IndexWriter(tmp_path / "ix", store="rice")
+    with pytest.raises(ValueError, match="share one configuration"):
+        IndexWriter(tmp_path / "ix", store="vbyte_cm", k=16)
+    with pytest.raises(ValueError, match="share one configuration"):
+        IndexWriter(tmp_path / "ix", store="vbyte_cm", positional=False, k=8)
+    resumed = IndexWriter.open(tmp_path / "ix")
+    assert resumed.store == "vbyte_cm" and resumed.store_kw == {"k": 8}
+    resumed.add_documents(DOCS[3:])
+    seg = resumed.commit()
+    assert seg.doc_base == 3 and resumed.n_docs == len(DOCS)
+
+
+def test_writer_segment_bases_accumulate(tmp_path):
+    w = IndexWriter(tmp_path / "ix", store="vbyte")
+    for lo in range(0, len(DOCS), 2):
+        w.add_documents(DOCS[lo:lo + 2])
+        w.commit()
+    bases = [s.doc_base for s in w.segments]
+    assert bases == [0, 2, 4]
+    token_bases = [s.token_base for s in w.segments]
+    assert token_bases == sorted(token_bases) and token_bases[0] == 0
+    merged = w.compact()
+    assert [s.name for s in w.segments] == [merged.name]
+    assert merged.n_docs == len(DOCS) and merged.doc_base == 0
+    # old segment dirs are gone; only the merged one remains
+    left = sorted(p.name for p in (tmp_path / "ix" / "segments").iterdir())
+    assert left == [merged.name]
+
+
+# ----------------------------------------------------------------------
+# Session.open surface
+# ----------------------------------------------------------------------
+def test_session_open_single_artifact_and_refresh_guard(tmp_path):
+    idx = NonPositionalIndex.build(DOCS, store="vbyte")
+    save_index(idx, tmp_path / "np")
+    sess = Session.open(tmp_path / "np", device=False)
+    assert np.array_equal(sess.execute("beta"), idx.query_word("beta"))
+    with pytest.raises(ValueError, match="writer directory"):
+        sess.refresh()
+
+
+def test_session_open_segmented_metrics_report_segments(tmp_path):
+    w = IndexWriter(tmp_path / "ix", store="vbyte")
+    w.add_documents(DOCS[:3])
+    w.commit()
+    w.add_documents(DOCS[3:])
+    w.commit()
+    sess = Session.open(tmp_path / "ix", device=False)
+    out = sess.execute(["beta", "docs: beta gamma"])
+    assert sess.metrics()["segments"] == 2
+    one = Session(NonPositionalIndex.build(DOCS, store="vbyte"),
+                  positional=PositionalIndex.build(DOCS, store="vbyte"))
+    for got, want in zip(out, one.execute(["beta", "docs: beta gamma"])):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert "segments: 2" in sess.explain("beta gamma")

@@ -20,11 +20,14 @@ import os
 import numpy as np
 import pytest
 
+from repro.core.artifact import open_index, save_index
 from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.core.registry import backend_names
+from repro.core.writer import IndexWriter
 from repro.data import generate_collection
 from repro.data.text import STOPWORDS, is_word_token, tokenize
 from repro.serving.engine import BatchedServer, QueryEngine, parse_query
+from repro.serving.session import Session
 
 BASE_SEED = int(os.environ.get("REPRO_DIFF_SEED", "20260727"))
 EDIT_RATES = (0.0, 0.2, 1.0)  # none / moderate / total mutation
@@ -124,6 +127,13 @@ def case(request) -> RefCase:
     return RefCase(rate, BASE_SEED + EDIT_RATES.index(rate))
 
 
+@pytest.fixture(scope="module")
+def rt_case() -> RefCase:
+    """One moderate-mutation case for the artifact/lifecycle identities
+    (the per-rate sweep above already covers query semantics)."""
+    return RefCase(0.2, BASE_SEED + EDIT_RATES.index(0.2))
+
+
 # ----------------------------------------------------------------------
 # every backend vs the reference, all query kinds
 # ----------------------------------------------------------------------
@@ -165,6 +175,68 @@ def test_doc_listing_identical_across_families(case):
             assert got.dtype == want.dtype and np.array_equal(got, want), (
                 f"family drift: seed={case.seed} edit_rate={case.rate} "
                 f"query={q!r} {base}={want.tolist()} {store}={got.tolist()}")
+
+
+# ----------------------------------------------------------------------
+# index lifecycle identities: persisted artifacts and segmented ingestion
+# answer byte-identically to the in-memory one-shot build
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("store", ALL_BACKENDS)
+def test_artifact_roundtrip_matches_reference(rt_case, store, tmp_path):
+    """Acceptance: for every registered backend,
+    ``open_index(save_index(build(...)))`` answers all six query kinds
+    byte-identically to the brute-force reference."""
+    case = rt_case
+    idx = open_index(save_index(
+        NonPositionalIndex.build(case.docs, store=store), tmp_path / "np"))
+    pidx = open_index(save_index(
+        PositionalIndex.build(case.docs, store=store), tmp_path / "pos"))
+    session = Session(idx, positional=pidx)
+    rng = np.random.default_rng(case.seed + 4)
+    for q, ref in case.sample_queries(rng):
+        got = np.asarray(session.execute(q))
+        if parse_query(q).kind in ("word", "and", "phrase"):
+            got = np.sort(np.unique(got))
+        assert got.dtype == ref.dtype and np.array_equal(got, ref), (
+            f"artifact round-trip mismatch: seed={case.seed} "
+            f"edit_rate={case.rate} store={store!r} query={q!r} "
+            f"got={got.tolist()} want={ref.tolist()}")
+
+
+@pytest.mark.parametrize("store", FAMILY_REPS)
+def test_writer_three_commits_matches_one_shot(rt_case, store, tmp_path):
+    """Acceptance: a 3-commit ``IndexWriter`` ingest served segment-aware
+    through ``Session.open`` — and again after ``compact()`` — answers
+    every query kind byte-identically to a fresh one-shot build."""
+    case = rt_case
+    writer = IndexWriter(tmp_path / "ix", store=store, positional=True)
+    cuts = (0, 3, 6, len(case.docs))
+    for lo, hi in zip(cuts, cuts[1:]):
+        writer.add_documents(case.docs[lo:hi])
+        writer.commit()
+    assert len(writer.segments) == 3
+    one_shot = Session(NonPositionalIndex.build(case.docs, store=store),
+                       positional=PositionalIndex.build(case.docs, store=store))
+    rng = np.random.default_rng(case.seed + 5)
+    queries = [q for q, _ in case.sample_queries(rng)]
+    want = [np.asarray(r) for r in one_shot.execute(queries)]
+
+    segmented = Session.open(tmp_path / "ix", device=False)
+    for q, w, g in zip(queries, want, segmented.execute(queries)):
+        g = np.asarray(g)
+        assert g.dtype == w.dtype and np.array_equal(g, w), (
+            f"segmented/one-shot drift: seed={case.seed} "
+            f"edit_rate={case.rate} store={store!r} query={q!r} "
+            f"segmented={g.tolist()} one_shot={w.tolist()}")
+
+    writer.compact()
+    assert len(writer.segments) == 1
+    assert segmented.refresh() == 1  # compaction reopens the merged segment
+    for q, w, g in zip(queries, want, segmented.execute(queries)):
+        assert np.array_equal(np.asarray(g), w), (
+            f"compacted/one-shot drift: seed={case.seed} "
+            f"edit_rate={case.rate} store={store!r} query={q!r} "
+            f"compacted={np.asarray(g).tolist()} one_shot={w.tolist()}")
 
 
 def test_device_doclist_matches_host(case):

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core.index import STORE_BUILDERS, NonPositionalIndex, PositionalIndex
+from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.data.text import STOPWORDS, is_word_token, tokenize
 
 FAST_STORES = ["vbyte", "rice", "rice_runs", "simple9", "pfordelta", "ef_opt",

@@ -10,7 +10,7 @@ kwargs are clear ValueErrors.
 import numpy as np
 import pytest
 
-from repro.core.index import STORE_BUILDERS, NonPositionalIndex, PositionalIndex
+from repro.core.index import NonPositionalIndex, PositionalIndex
 from repro.core.registry import (
     ALL_CAPABILITIES,
     FAMILY_INVERTED,
@@ -67,7 +67,9 @@ def test_unknown_backend_is_value_error():
     with pytest.raises(ValueError, match="registered backends"):
         NonPositionalIndex.build(["a b c"], store="not_a_store")
     with pytest.raises(ValueError, match="registered backends"):
-        STORE_BUILDERS["definitely_missing"]
+        from repro.core.registry import restore_backend
+
+        restore_backend("definitely_missing", {})
 
 
 def test_bad_build_kwargs_are_value_error():
