@@ -33,4 +33,13 @@ LIFECYCLE_DIR=$(mktemp -d)
 trap 'rm -rf "$LIFECYCLE_DIR"' EXIT INT TERM
 python scripts/lifecycle_smoke.py "$LIFECYCLE_DIR"
 
+echo "== serving frontier: record benchmark runs into BENCH_*.json =="
+# small configurations — the point is the recorded trajectory (every CI
+# run appends its numbers next to its predecessors'), not peak load
+python benchmarks/serving_latency.py --store vbyte --queries 120 --pool 32 \
+    | python scripts/record_bench.py BENCH_serving.json
+python benchmarks/ingest_throughput.py --store vbyte --commits 4 --batch 60 \
+    --workdir "$LIFECYCLE_DIR/ingest_bench" \
+    | python scripts/record_bench.py BENCH_ingest.json
+
 echo "ci OK"

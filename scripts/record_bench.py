@@ -1,0 +1,83 @@
+"""Append one benchmark run to a checked-in ``BENCH_*.json`` trajectory.
+
+Benchmarks print a human-readable report followed by one JSON line; until
+now that JSON died on stdout, so q/s and tail-latency regressions were
+anecdotal.  This filter reads a benchmark's stdout, takes the **last line
+that parses as a JSON object**, stamps it with the UTC time and the
+current git commit, and appends it to the named trajectory file (a JSON
+array, one element per recorded run) — which is committed, so every PR's
+benchmark numbers line up next to its predecessors'.
+
+    PYTHONPATH=src python benchmarks/serving_latency.py \
+        | python scripts/record_bench.py BENCH_serving.json
+    PYTHONPATH=src python benchmarks/ingest_throughput.py \
+        | python scripts/record_bench.py BENCH_ingest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from datetime import datetime, timezone
+from pathlib import Path
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def record(path: Path, payload: dict) -> dict:
+    entry = {"recorded_at": datetime.now(timezone.utc)
+             .strftime("%Y-%m-%dT%H:%M:%SZ"),
+             "git": _git_rev(), **payload}
+    history = []
+    if path.is_file():
+        history = json.loads(path.read_text())
+        if not isinstance(history, list):
+            raise SystemExit(f"{path} is not a JSON array trajectory")
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trajectory", type=Path,
+                    help="BENCH_*.json file to append to (created if missing)")
+    ap.add_argument("--echo", action="store_true",
+                    help="also repeat the benchmark stdout (default: just "
+                         "the human-readable lines, not the JSON)")
+    args = ap.parse_args()
+
+    payload = None
+    for line in sys.stdin:
+        stripped = line.strip()
+        parsed = None
+        if stripped.startswith("{"):
+            try:
+                parsed = json.loads(stripped)
+            except json.JSONDecodeError:
+                parsed = None
+        if isinstance(parsed, dict):
+            payload = parsed
+            if not args.echo:
+                continue
+        sys.stdout.write(line)
+    if payload is None:
+        raise SystemExit("no JSON object line found on stdin — did the "
+                         "benchmark fail before its JSON summary?")
+    entry = record(args.trajectory, payload)
+    runs = len(json.loads(args.trajectory.read_text()))
+    print(f"recorded run {runs} ({entry['git']} at {entry['recorded_at']}) "
+          f"-> {args.trajectory}")
+
+
+if __name__ == "__main__":
+    main()

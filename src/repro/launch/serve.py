@@ -11,10 +11,18 @@ The index lifecycle flags cover build→persist→open→serve→ingest:
 rebuilding; ``--ingest N`` commits a batch of N new version documents
 against the live directory and refreshes the running session in place.
 
+``--frontend`` pushes the same traffic through the async micro-batch
+frontend (:mod:`repro.serving.frontend`) with open-loop arrivals
+(``--rate`` q/s Poisson, 0 = burst) and reports the serving-frontier
+metrics: p50/p95/p99 tail latency, reject rate, queue depth, result-cache
+hit rate; ``--replicas N --shards M`` replicate the device path behind
+least-loaded dispatch.
+
     PYTHONPATH=src python -m repro.launch.serve --articles 10 --queries 64
     PYTHONPATH=src python -m repro.launch.serve --mode mixed --probe kernel
     PYTHONPATH=src python -m repro.launch.serve --save-dir /tmp/ix --commits 4
     PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/ix --ingest 8
+    PYTHONPATH=src python -m repro.launch.serve --frontend --rate 500 --replicas 2
 """
 
 from __future__ import annotations
@@ -47,6 +55,21 @@ def main() -> None:
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--explain", action="store_true",
                     help="print the physical plan of one query per distinct shape")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve the traffic through the async micro-batch "
+                         "frontend (open-loop arrivals, result cache, "
+                         "p50/p95/p99 tail latency)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="--frontend offered load in q/s (0 = burst arrival)")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="--frontend micro-batch size trigger")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="--frontend micro-batch deadline trigger")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="device-path replicas behind least-loaded dispatch "
+                         "(build path only)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="document-partitioned shards per replica")
     ap.add_argument("--save-dir", type=str, default=None,
                     help="persist the build as a segmented writer directory "
                          "and serve from disk")
@@ -160,6 +183,51 @@ def main() -> None:
     agree = sum(1 for h, d in zip(host_results, results)
                 if np.array_equal(np.asarray(h), np.asarray(d)))
     print(f"host/planned agreement: {agree}/{args.queries} queries")
+
+    if args.frontend:
+        import asyncio
+
+        from ..serving.frontend import (FrontendConfig, MicroBatchFrontend,
+                                        replicated_session, run_open_loop)
+
+        fe_session = session
+        if args.replicas > 1 or args.shards > 1:
+            if live_dir is not None:
+                ap.error("--replicas/--shards replicate the in-memory build "
+                         "path (drop --index-dir/--save-dir)")
+            fe_session = replicated_session(idx, positional=pidx,
+                                            n_replicas=args.replicas,
+                                            n_shards=args.shards,
+                                            probe=args.probe)
+            print(f"replicated device path: {args.replicas} replica(s) "
+                  f"x {args.shards} shard(s), least-loaded dispatch")
+        cfg = FrontendConfig(max_batch=args.max_batch,
+                             max_delay=args.max_delay_ms / 1e3)
+        fe = MicroBatchFrontend(fe_session, cfg)
+        # cold pass traces the device steps; the warm pass is the
+        # measurement (and shows the result cache absorbing repeats)
+        run_open_loop(fe_session, queries, rate_qps=args.rate,
+                      frontend=fe, seed=args.seed)
+        fe_results, rep = run_open_loop(fe_session, queries,
+                                        rate_qps=args.rate, frontend=fe,
+                                        seed=args.seed + 1)
+        lat, m = rep["latency"], fe.metrics()
+        arrivals = (f"{args.rate:.0f} q/s Poisson" if args.rate else "burst")
+        print(f"frontend ({arrivals}, max_batch={args.max_batch}, "
+              f"deadline={args.max_delay_ms}ms): "
+              f"p50 {lat['p50_ms']}ms p95 {lat['p95_ms']}ms "
+              f"p99 {lat['p99_ms']}ms; achieved {rep['achieved_qps']} q/s")
+        print(f"frontend admission: {m['rejected']} rejected "
+              f"(reject rate {m['reject_rate']:.2f}), max queue depth "
+              f"{lat.get('queue_depth_max', 0)}; cache hit rate "
+              f"{m['cache']['hit_rate']:.2f} ({m['coalesced']} coalesced); "
+              f"mean batch {m['mean_batch']} over {m['batches']} flushes "
+              f"{m['flushes']}")
+        fe_agree = sum(
+            1 for h, d in zip(host_results, fe_results)
+            if d is not None and np.array_equal(np.asarray(h), np.asarray(d)))
+        print(f"host/frontend agreement: {fe_agree}/{args.queries} queries")
+        asyncio.run(fe.close())
 
     if args.ingest:
         # commit a new version batch against the live directory, then

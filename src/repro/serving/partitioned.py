@@ -210,6 +210,15 @@ class PartitionedServer:
             self._c_offsets_np = np.asarray(self.pidx.arrays["c_offsets"])
 
     @classmethod
+    def from_index(cls, index, n_shards: int, mesh=None,
+                   shard_axis: str = "data", **kw) -> "PartitionedServer":
+        """Shard an already-built index (any registered backend) into the
+        partitioned layout — the in-memory counterpart of :meth:`open`,
+        used by the replicated serving tier to stamp out shard sets."""
+        pidx = PartitionedAnchoredIndex.from_index(index, n_shards=n_shards, **kw)
+        return cls(pidx=pidx, host_index=index, mesh=mesh, shard_axis=shard_axis)
+
+    @classmethod
     def open(cls, path, n_shards: int, mesh=None, shard_axis: str = "data",
              **kw) -> "PartitionedServer":
         """Open a persisted index artifact (``repro.core.artifact``) and
@@ -218,9 +227,8 @@ class PartitionedServer:
         a sharded layout without rebuilding the index."""
         from ..core.artifact import open_index
 
-        index = open_index(path)
-        pidx = PartitionedAnchoredIndex.from_index(index, n_shards=n_shards, **kw)
-        return cls(pidx=pidx, host_index=index, mesh=mesh, shard_axis=shard_axis)
+        return cls.from_index(open_index(path), n_shards=n_shards, mesh=mesh,
+                              shard_axis=shard_axis, **kw)
 
     @property
     def trace_count(self) -> int:

@@ -280,6 +280,17 @@ def plan_key(ctx, pq: ParsedQuery) -> tuple:
             known, width_bucket(len(pq.terms)))
 
 
+def result_cache_key(ctx, pq: ParsedQuery) -> tuple:
+    """Structural **result**-cache key: the routing shape (:func:`plan_key`)
+    plus the concrete terms — everything that determines a query's *answer*
+    against a fixed collection.  Unlike :func:`plan_key` (shared by every
+    query of one shape) this key is per-distinct-query: ``top3:`` and
+    ``top5:`` over the same terms differ (``k`` is part of the shape), and
+    the serving frontend appends the session's segment shape so an answer
+    computed against one segment set is never served against another."""
+    return (plan_key(ctx, pq), pq.terms)
+
+
 def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
     """Route one parsed query against ``ctx`` (anything with ``index`` /
     ``positional`` / ``server`` / ``positional_server`` attributes).

@@ -72,6 +72,7 @@ from .plan import (
     explain_text,
     parse_query,
     plan_key,
+    result_cache_key,
     route_query,
 )
 
@@ -101,6 +102,9 @@ class Session:
         self._segments: list[_Segment] = []
         self._source_path: Path | None = None
         self._open_kw: dict = {}
+        self._refresh_hooks: list = []
+        self.data_version = 0
+        self.frontend = None  # attached MicroBatchFrontend (metrics surface)
         self.plans_compiled = 0
         self.plan_cache_hits = 0
         self.queries_executed = 0
@@ -178,9 +182,12 @@ class Session:
             raise ValueError("refresh() requires a session opened from a "
                              "writer directory (Session.open)")
         writer = IndexWriter.open(self._source_path)
+        old_names = [s.name for s in self._segments]
+        old_shape = self.segment_shape
         current = {s.name: s for s in self._segments}
         live = [m.name for m in writer.segments]
-        if [s.name for s in self._segments] != live[:len(self._segments)]:
+        append_only = old_names == live[:len(old_names)]
+        if not append_only:
             current = {}  # compacted / rewritten: reopen everything
         fresh: list[_Segment] = []
         opened = 0
@@ -196,7 +203,35 @@ class Session:
                 opened += 1
             fresh.append(seg)
         self._segments = fresh
+        if old_names != [s.name for s in fresh]:
+            # the visible data changed: bump the version and tell listeners
+            # (the frontend result cache) what happened — the appended child
+            # sessions when the change was append-only, None for a rewrite
+            self.data_version += 1
+            added = ([s.session for s in fresh[len(old_names):]]
+                     if append_only else None)
+            for hook in self._refresh_hooks:
+                hook(old_shape, self.segment_shape, added)
         return opened
+
+    def add_refresh_hook(self, hook) -> None:
+        """Register ``hook(old_shape, new_shape, added_sessions | None)`` to
+        run whenever :meth:`refresh` changes the visible segment set —
+        ``added_sessions`` lists the child sessions of appended segments, or
+        is ``None`` when the set was rewritten (compaction).  The serving
+        frontend uses this to invalidate exactly the affected result-cache
+        entries."""
+        self._refresh_hooks.append(hook)
+
+    def result_key(self, pq) -> tuple:
+        """Cache key under which ``pq``'s *answer* may be memoized:
+        (plan structure, concrete terms, segment shape) — see
+        :func:`repro.serving.plan.result_cache_key`.  The segment-shape
+        component means an answer computed against one committed segment
+        set is never served against another."""
+        pq = parse_query(pq)
+        ctx = self._segments[0].session if self._segments else self
+        return result_cache_key(ctx, pq) + (self.segment_shape,)
 
     @property
     def segment_shape(self) -> tuple:
@@ -283,6 +318,8 @@ class Session:
         }
         if self._segments:
             out["segments"] = len(self._segments)
+        if self.frontend is not None:
+            out["frontend"] = self.frontend.metrics()
         return out
 
     # -- execution ------------------------------------------------------

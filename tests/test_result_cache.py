@@ -1,0 +1,231 @@
+"""Result-cache correctness: never a stale answer, precise invalidation.
+
+The cache memoizes answers under (physical-plan structure, concrete terms,
+segment shape).  These tests pin the contract down against a live
+:class:`~repro.core.writer.IndexWriter` collection: repeated traffic hits
+the cache and stays byte-identical to a cold session; ``refresh()`` after
+``writer.commit()`` invalidates **exactly** the entries whose terms can
+occur in the new segment (the rest keep serving from cache); ``top3:`` and
+``top5:`` over the same terms are distinct entries; a compaction clears
+everything.  The headline property throughout: zero drift versus a session
+opened cold after every commit.
+"""
+
+import asyncio
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.writer import IndexWriter
+from repro.serving.frontend import FrontendConfig, MicroBatchFrontend
+from repro.serving.session import Session
+
+BASE_SEED = int(os.environ.get("REPRO_DIFF_SEED", "20260727"))
+
+# controlled vocabulary — none of these are tokenizer stopwords, none
+# hyphenated, so each word is exactly one term in exactly the docs below
+DOCS_V1 = [
+    "alpha beta gamma alpha beta",
+    "alpha gamma delta epsilon gamma",
+    "zebra quartz zebra nickel quartz",
+    "beta delta nickel epsilon beta",
+]
+DOCS_V2 = [  # second commit: mentions alpha/beta/gamma, never zebra/quartz
+    "alpha beta alpha gamma beta",
+    "delta alpha epsilon beta gamma",
+]
+
+
+def make_writer(tmp_path, docs=DOCS_V1, store="vbyte"):
+    w = IndexWriter(tmp_path / "col", store=store, positional=True)
+    w.add_documents(docs)
+    w.commit()
+    return w
+
+
+def submit_all(session, queries, config=None):
+    """One frontend lifetime: submit each query in order, return results
+    plus the frontend (already closed) for metric inspection."""
+    config = config or FrontendConfig(max_batch=4, max_delay=0.001)
+
+    async def main():
+        async with MicroBatchFrontend(session, config) as fe:
+            results = [await fe.submit(q) for q in queries]
+            return results, fe
+
+    return asyncio.run(main())
+
+
+def cold_answers(path, queries):
+    return Session.open(path, device=False).execute(queries)
+
+
+def test_repeat_traffic_hits_cache_and_matches_cold(tmp_path):
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+    queries = ["alpha beta", "docs: gamma", 'top3: alpha gamma',
+               '"zebra quartz"', "docs: zebra"]
+    traffic = queries * 3  # repeated pool, like real serving traffic
+    results, fe = submit_all(session, traffic)
+    cache = fe.metrics()["cache"]
+    assert cache["hit_rate"] > 0, cache
+    assert cache["hits"] >= 2 * len(queries), cache
+    reference = cold_answers(w.path, traffic)
+    for q, res, ref in zip(traffic, results, reference):
+        assert np.array_equal(np.asarray(res), np.asarray(ref)), \
+            f"(seed={BASE_SEED}, query={q!r}): cached {res} != cold {ref}"
+
+
+def test_topk_variants_are_distinct_entries(tmp_path):
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+    queries = ["top3: alpha beta", "top5: alpha beta",
+               "docs-top3: alpha beta", "docs-top5: alpha beta"]
+    # distinct result keys -> four entries, no cross-talk
+    keys = [session.result_key(q) for q in queries]
+    assert len(set(keys)) == len(keys), keys
+    results, fe = submit_all(session, queries * 2)
+    assert fe.metrics()["cache"]["entries"] == len(queries)
+    reference = cold_answers(w.path, queries * 2)
+    for q, res, ref in zip(queries * 2, results, reference):
+        assert np.array_equal(np.asarray(res), np.asarray(ref)), \
+            f"query={q!r}: k-variant entries crossed"
+
+
+def test_result_key_carries_segment_shape(tmp_path):
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+    before = session.result_key("docs: alpha")
+    w.add_documents(DOCS_V2)
+    w.commit()
+    session.refresh()
+    after = session.result_key("docs: alpha")
+    assert before != after
+    assert before[:2] == after[:2]  # same plan structure + terms
+    assert before[2] != after[2]  # the segment shape moved
+
+
+def test_commit_refresh_invalidates_exactly_affected_entries(tmp_path):
+    """The precise-invalidation contract, end to end: after a commit that
+    mentions alpha but never zebra, the zebra entry keeps serving from
+    cache, the alpha entries are recomputed — and *every* answer equals a
+    cold open of the committed state (zero stale serves)."""
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+
+    async def main():
+        fe = MicroBatchFrontend(session,
+                                FrontendConfig(max_batch=4, max_delay=0.001))
+        warm = ["docs: alpha", "docs: zebra", "alpha beta", '"zebra quartz"']
+        before = [np.asarray(r) for r in
+                  [await fe.submit(q) for q in warm]]
+        assert len(fe.cache) == len(warm)
+
+        w.add_documents(DOCS_V2)  # alpha/beta/gamma only — zebra untouched
+        w.commit()
+        opened = await fe.refresh()
+        assert opened == 1  # one appended segment
+        cache = fe.cache.metrics()
+        # alpha-only entries die; zebra entries migrate to the new shape
+        assert cache["invalidated"] == 2, cache
+        assert cache["migrated"] == 2, cache
+        assert cache["entries"] == 2, cache
+
+        hits0 = fe.cache.hits
+        after = {q: np.asarray(await fe.submit(q)) for q in warm}
+        # the zebra queries were served straight from the migrated entries
+        assert fe.cache.hits >= hits0 + 2, fe.cache.metrics()
+        return before, warm, after
+
+    before, warm, after = asyncio.run(main())
+    reference = dict(zip(warm, cold_answers(w.path, warm)))
+    for q in warm:
+        assert np.array_equal(after[q], np.asarray(reference[q])), \
+            f"(seed={BASE_SEED}, query={q!r}): stale serve after commit+refresh"
+    # and the commit really changed the alpha answers (the invalidation
+    # wasn't vacuous): DOCS_V2 adds docs 4 and 5 containing alpha
+    before_alpha = before[warm.index("docs: alpha")]
+    assert not np.array_equal(before_alpha, after["docs: alpha"])
+    assert set(after["docs: alpha"].tolist()) >= {4, 5}
+    # zebra listing is byte-identical before and after
+    assert np.array_equal(before[warm.index("docs: zebra")],
+                          after["docs: zebra"])
+
+
+def test_plain_refresh_drives_invalidation_too(tmp_path):
+    """Invalidation hangs off Session.refresh() itself — a caller who
+    never touches frontend.refresh() still gets a correct cache."""
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+
+    async def main():
+        async with MicroBatchFrontend(
+                session, FrontendConfig(max_batch=2, max_delay=0.001)) as fe:
+            await fe.submit("docs: alpha")
+            await fe.submit("docs: zebra")
+            w.add_documents(DOCS_V2)
+            w.commit()
+            session.refresh()  # NOT fe.refresh()
+            m = fe.cache.metrics()
+            assert m["invalidated"] == 1 and m["migrated"] == 1, m
+            res = np.asarray(await fe.submit("docs: alpha"))
+            return res
+
+    res = asyncio.run(main())
+    assert np.array_equal(res, np.asarray(cold_answers(w.path,
+                                                       ["docs: alpha"])[0]))
+
+
+def test_compaction_clears_all_entries(tmp_path):
+    w = make_writer(tmp_path)
+    w.add_documents(DOCS_V2)
+    w.commit()
+    session = Session.open(w.path, device=False)
+
+    async def main():
+        fe = MicroBatchFrontend(session,
+                                FrontendConfig(max_batch=4, max_delay=0.001))
+        queries = ["docs: zebra", "docs: alpha", '"zebra quartz"']
+        before = [np.asarray(r) for r in
+                  [await fe.submit(q) for q in queries]]
+        assert len(fe.cache) == len(queries)
+        w.compact()  # rewrites the segment set: nothing may survive
+        await fe.refresh()
+        m = fe.cache.metrics()
+        assert m["entries"] == 0, m
+        assert m["migrated"] == 0, m
+        assert m["invalidated"] == len(queries), m
+        after = [np.asarray(await fe.submit(q)) for q in queries]
+        return queries, before, after
+
+    queries, before, after = asyncio.run(main())
+    # compaction preserves answers (same docs, one segment) — recomputed,
+    # not served stale, and still correct
+    reference = cold_answers(w.path, queries)
+    for q, b, a, ref in zip(queries, before, after, reference):
+        assert np.array_equal(a, np.asarray(ref)), f"query={q!r}"
+        assert np.array_equal(b, a), f"query={q!r}: compaction changed data?"
+
+
+def test_cache_disabled_still_correct(tmp_path):
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+    queries = ["alpha beta", "docs: gamma"] * 2
+    results, fe = submit_all(
+        session, queries,
+        FrontendConfig(max_batch=4, max_delay=0.001, cache_entries=0))
+    m = fe.metrics()["cache"]
+    assert m["entries"] == 0 and m["hits"] == 0, m
+    reference = cold_answers(w.path, queries)
+    for q, res, ref in zip(queries, results, reference):
+        assert np.array_equal(np.asarray(res), np.asarray(ref))
+
+
+def test_cached_arrays_are_frozen(tmp_path):
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+    results, fe = submit_all(session, ["docs: alpha", "docs: alpha"])
+    assert results[1].flags.writeable is False
+    with pytest.raises(ValueError):
+        results[1][0] = 999  # a caller cannot corrupt the shared entry
