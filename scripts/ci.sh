@@ -41,5 +41,9 @@ python benchmarks/serving_latency.py --store vbyte --queries 120 --pool 32 \
 python benchmarks/ingest_throughput.py --store vbyte --commits 4 --batch 60 \
     --workdir "$LIFECYCLE_DIR/ingest_bench" \
     | python scripts/record_bench.py BENCH_ingest.json
+python benchmarks/ranked_throughput.py --store vbyte --repeats 2 \
+    | python scripts/record_bench.py BENCH_serving.json
+python benchmarks/compression_ratio.py \
+    | python scripts/record_bench.py BENCH_compression.json
 
 echo "ci OK"

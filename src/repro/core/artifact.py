@@ -34,7 +34,8 @@ from pathlib import Path
 import numpy as np
 
 from ..data.text import Vocabulary
-from .index import NonPositionalIndex, PositionalIndex
+from .analyzer import Analyzer, get_analyzer
+from .index import NonPositionalIndex, PositionalIndex, ScoringStats
 from .registry import backend_arrays, restore_backend
 
 FORMAT_VERSION = 1
@@ -123,6 +124,17 @@ def save_index(index: NonPositionalIndex | PositionalIndex, path) -> Path:
     if getattr(index, "token_stream", None) is not None:
         components["token_stream"] = _write_component(
             root, "token_stream", np.asarray(index.token_stream, dtype=np.int64))
+    if kind == KIND_NONPOSITIONAL:
+        # pin the analysis chain: reopening with a different query-time
+        # analyzer must be refused, not silently mis-ranked
+        meta["analyzer"] = (index.analyzer or Analyzer()).config()
+        scoring = index.scoring
+        if scoring is not None:
+            for key in ("doc_lengths", "run_docs", "run_tfs",
+                        "run_offsets", "max_tf"):
+                components[f"scoring.{key}"] = _write_component(
+                    root, f"scoring.{key}",
+                    np.asarray(getattr(scoring, key), dtype=np.int64))
     for key, value in backend_arrays(index.store_name, index.store).items():
         components[f"store.{key}"] = _write_component(root, f"store.{key}", value)
 
@@ -160,9 +172,14 @@ def read_manifest(path) -> dict:
     return manifest
 
 
-def open_index(path) -> NonPositionalIndex | PositionalIndex:
+def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
     """Reopen a persisted index: verify checksums, rebuild the vocabulary,
-    restore the backend through its registered hook."""
+    restore the backend through its registered hook.
+
+    ``analyzer`` asserts the query-time analysis chain: if it differs from
+    the chain recorded at build time the open is refused with an
+    :class:`ArtifactError` (the index terms would not match the query
+    terms).  Omit it to adopt the recorded chain."""
     root = Path(path)
     manifest = read_manifest(root)
     components = manifest["components"]
@@ -196,10 +213,27 @@ def open_index(path) -> NonPositionalIndex | PositionalIndex:
             token_stream=None if stream is None else np.asarray(stream, dtype=np.int64),
             store_kw=store_kw)
     if manifest["kind"] == KIND_NONPOSITIONAL:
+        recorded = Analyzer.from_config(meta.get("analyzer"))
+        if analyzer is not None:
+            requested = get_analyzer(analyzer)
+            if requested.config() != recorded.config():
+                raise ArtifactError(
+                    f"analyzer mismatch at {root}: artifact was built with "
+                    f"{recorded.config()} but the query-time analyzer is "
+                    f"{requested.config()} — reopen with the recorded "
+                    f"analyzer or rebuild the index")
+        scoring = None
+        if "scoring.doc_lengths" in loaded:
+            scoring = ScoringStats(
+                doc_lengths=np.asarray(loaded["scoring.doc_lengths"], dtype=np.int64),
+                run_docs=np.asarray(loaded["scoring.run_docs"], dtype=np.int64),
+                run_tfs=np.asarray(loaded["scoring.run_tfs"], dtype=np.int64),
+                run_offsets=np.asarray(loaded["scoring.run_offsets"], dtype=np.int64),
+                max_tf=np.asarray(loaded["scoring.max_tf"], dtype=np.int64))
         return NonPositionalIndex(
             vocab=vocab, store=store, n_docs=int(meta["n_docs"]),
             collection_bytes=int(meta["collection_bytes"]),
             store_name=store_name, doc_starts=doc_starts,
-            store_kw=store_kw)
+            store_kw=store_kw, analyzer=recorded, scoring=scoring)
     raise ArtifactError(f"artifact at {root} has unknown kind "
                         f"{manifest['kind']!r}")

@@ -82,6 +82,41 @@ def rank_docs(docs: np.ndarray, scores: np.ndarray, k: int) -> np.ndarray:
 
 
 # ----------------------------------------------------------------------
+# BM25 scoring (the `rank<k>:` relevance model)
+# ----------------------------------------------------------------------
+# Okapi BM25 with the non-negative idf variant: every matching term
+# contributes a strictly positive score, so score > 0 <=> some query term
+# occurs — the property the device top-k uses to mask padding.
+BM25_K1 = 1.2
+BM25_B = 0.75
+
+
+def bm25_idf(df: int, n_docs: int) -> float:
+    """ln(1 + (N - df + 0.5) / (df + 0.5)) — positive for every df <= N."""
+    return float(np.log1p((n_docs - df + 0.5) / (df + 0.5)))
+
+
+def bm25_tf_weight(tf, dl, avgdl: float,
+                   k1: float = BM25_K1, b: float = BM25_B):
+    """tf·(k1+1) / (tf + k1·(1 − b + b·dl/avgdl)); vectorized, float64."""
+    tf = np.asarray(tf, dtype=np.float64)
+    dl = np.asarray(dl, dtype=np.float64)
+    return (tf * (k1 + 1.0)) / (tf + k1 * (1.0 - b + b * dl / max(avgdl, 1e-9)))
+
+
+def bm25_upper_bound(df: int, max_tf: int, n_docs: int,
+                     k1: float = BM25_K1, b: float = BM25_B) -> float:
+    """Largest score any single document can draw from this term: idf times
+    the tf weight at the term's max tf and the most favorable (dl → 0)
+    length normalization.  Safe for WAND/MaxScore pruning: no document's
+    contribution can exceed it."""
+    if df <= 0 or max_tf <= 0:
+        return 0.0
+    w = (max_tf * (k1 + 1.0)) / (max_tf + k1 * (1.0 - b))
+    return bm25_idf(df, n_docs) * w
+
+
+# ----------------------------------------------------------------------
 # grammar-aware fast path (Re-Pair stores)
 # ----------------------------------------------------------------------
 def grammar_doc_runs(store, i: int, doc_starts: np.ndarray

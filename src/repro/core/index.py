@@ -27,7 +27,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..data.text import STOPWORDS, Vocabulary, is_word_token, tokenize
+from ..data.text import Vocabulary, tokenize
+from .analyzer import DEFAULT_ANALYZER, Analyzer, get_analyzer
 from .registry import (
     FAMILY_SELFINDEX,
     BuildSource,
@@ -41,22 +42,72 @@ from .registry import (
 class IndexStats:
     """Aggregate index statistics — the cost signal of the query-plan
     compiler (``serving.plan``): list lengths bound candidate counts,
-    ``universe_size`` is the selectivity denominator."""
+    ``universe_size`` is the selectivity denominator, ``avgdl`` the BM25
+    length-normalization pivot (0.0 when no scoring statistics exist)."""
 
     n_lists: int
     n_postings: int
     universe_size: int
     avg_list_length: float
     max_list_length: int
+    avgdl: float = 0.0
 
 
-def _compute_stats(store, universe: int) -> IndexStats:
+def _compute_stats(store, universe: int, scoring=None) -> IndexStats:
     lengths = [store.list_length(i) for i in range(store.n_lists)]
     total = int(sum(lengths))
     return IndexStats(
         n_lists=store.n_lists, n_postings=total, universe_size=int(universe),
         avg_list_length=round(total / max(1, store.n_lists), 2),
-        max_list_length=int(max(lengths, default=0)))
+        max_list_length=int(max(lengths, default=0)),
+        avgdl=0.0 if scoring is None else round(scoring.avgdl, 2))
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class ScoringStats:
+    """Per-term (doc, tf) runs + per-doc lengths — the ranked-retrieval
+    substrate (Gagie et al., *Document Retrieval on Repetitive String
+    Collections*): each term's run is its ascending doc-id list with the
+    in-document frequency alongside.  Stored index-level (independent of
+    the backend's compressed posting representation) so every backend
+    family ranks identically; persisted as artifact components and merged
+    across segments on commit/compact."""
+
+    doc_lengths: np.ndarray  # int64[n_docs] — analyzed terms kept per doc
+    run_docs: np.ndarray     # int64[n_postings] — concatenated doc runs
+    run_tfs: np.ndarray      # int64[n_postings] — tf aligned with run_docs
+    run_offsets: np.ndarray  # int64[n_lists + 1]
+    max_tf: np.ndarray       # int64[n_lists] — per-term tf upper input
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.doc_lengths)
+
+    @property
+    def total_terms(self) -> int:
+        return int(self.doc_lengths.sum())
+
+    @property
+    def avgdl(self) -> float:
+        return self.total_terms / max(1, self.n_docs)
+
+    def df(self, tid: int) -> int:
+        return int(self.run_offsets[tid + 1] - self.run_offsets[tid])
+
+    def term_runs(self, tid: int) -> tuple[np.ndarray, np.ndarray]:
+        """(ascending doc ids, aligned term frequencies) of one term."""
+        lo, hi = int(self.run_offsets[tid]), int(self.run_offsets[tid + 1])
+        return self.run_docs[lo:hi], self.run_tfs[lo:hi]
+
+    def term_max_tf(self, tid: int) -> int:
+        return int(self.max_tf[tid])
+
+    @property
+    def size_in_bits(self) -> int:
+        return 64 * (len(self.doc_lengths) + len(self.run_docs)
+                     + len(self.run_tfs) + len(self.run_offsets)
+                     + len(self.max_tf))
 
 
 class _StatsMixin:
@@ -67,7 +118,8 @@ class _StatsMixin:
         """Aggregate statistics (computed once, cached)."""
         cached = self.__dict__.get("_stats")
         if cached is None:
-            cached = _compute_stats(self.store, self.universe_size)
+            cached = _compute_stats(self.store, self.universe_size,
+                                    getattr(self, "scoring", None))
             self.__dict__["_stats"] = cached
         return cached
 
@@ -88,32 +140,56 @@ class NonPositionalIndex(_StatsMixin):
     store_name: str
     doc_starts: np.ndarray | None = None  # only set for self-index backends
     store_kw: dict = field(default_factory=dict)  # build kwargs (persisted)
+    analyzer: Analyzer | None = None      # build-time analysis chain
+    scoring: ScoringStats | None = None   # BM25 substrate (doc runs + dl)
 
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", case_fold: bool = True,
-              drop_stopwords: bool = True, **store_kw) -> "NonPositionalIndex":
+              drop_stopwords: bool = True, analyzer=None, **store_kw) -> "NonPositionalIndex":
         spec = get_backend_spec(store)  # unknown name -> ValueError up front
+        if analyzer is None:
+            analyzer = Analyzer(case_fold=case_fold, drop_stopwords=drop_stopwords)
+        else:
+            analyzer = get_analyzer(analyzer)
         vocab = Vocabulary()
         postings: dict[int, list[int]] = {}
+        tf_lists: dict[int, list[int]] = {}
         need_stream = spec.family == FAMILY_SELFINDEX
         stream: list[int] = []
         doc_starts = np.zeros(len(docs), dtype=np.int64)
+        doc_lengths = np.zeros(len(docs), dtype=np.int64)
         for d, doc in enumerate(docs):
             doc_starts[d] = len(stream)
-            seen: set[int] = set()
             for tok in tokenize(doc):
-                if not is_word_token(tok):
+                w = analyzer.normalize(tok)
+                if w is None:
                     continue
-                w = tok.lower() if case_fold else tok
-                if drop_stopwords and w in STOPWORDS:
-                    continue
+                doc_lengths[d] += 1
                 wid = vocab.add(w)
                 if need_stream:
                     stream.append(wid)
-                if wid not in seen:
-                    seen.add(wid)
-                    postings.setdefault(wid, []).append(d)
+                plist = postings.setdefault(wid, [])
+                tfs = tf_lists.setdefault(wid, [])
+                if plist and plist[-1] == d:
+                    tfs[-1] += 1
+                else:
+                    plist.append(d)
+                    tfs.append(1)
         lists = [np.asarray(postings.get(w, []), dtype=np.int64) for w in range(len(vocab))]
+        run_offsets = np.zeros(len(vocab) + 1, dtype=np.int64)
+        max_tf = np.zeros(len(vocab), dtype=np.int64)
+        flat_tfs: list[int] = []
+        for w in range(len(vocab)):
+            tl = tf_lists.get(w, [])
+            run_offsets[w + 1] = run_offsets[w] + len(tl)
+            max_tf[w] = max(tl, default=0)
+            flat_tfs.extend(tl)
+        scoring = ScoringStats(
+            doc_lengths=doc_lengths,
+            run_docs=(np.concatenate(lists) if lists
+                      else np.zeros(0, dtype=np.int64)),
+            run_tfs=np.asarray(flat_tfs, dtype=np.int64),
+            run_offsets=run_offsets, max_tf=max_tf)
         source = BuildSource(
             lists=lists, n_docs=len(docs),
             stream=np.asarray(stream, dtype=np.int64) if need_stream else None,
@@ -123,10 +199,18 @@ class NonPositionalIndex(_StatsMixin):
         return cls(vocab=vocab, store=built, n_docs=len(docs),
                    collection_bytes=sum(len(d) for d in docs), store_name=store,
                    doc_starts=doc_starts if need_stream else None,
-                   store_kw=dict(store_kw))
+                   store_kw=dict(store_kw), analyzer=analyzer, scoring=scoring)
 
     def word_id(self, w: str) -> int | None:
-        return self.vocab.get(w.lower())
+        # exact vocabulary hit first: index terms are already analyzed and
+        # analysis is not idempotent (re-stemming an analyzed term can map
+        # it elsewhere), so an already-analyzed query term must resolve to
+        # itself before the chain runs
+        wid = self.vocab.get(w)
+        if wid is not None:
+            return wid
+        term = (self.analyzer or DEFAULT_ANALYZER).normalize(w)
+        return None if term is None else self.vocab.get(term)
 
     # uniform term lookup for the planner/serving layers
     lookup = word_id

@@ -337,6 +337,11 @@ OP_SELF_DOCLIST = "self-doclist"
 OP_GRAMMAR_DOCLIST = "grammar-doclist"
 OP_DOC_RUNS = "doc-runs"
 OP_REDUCE_DOCLIST = "reduce-doclist"
+OP_SCORED_RUNS = "scored-doc-runs"
+OP_SCORED_REDUCE = "scored-reduce"
+OP_WAND_TOPK = "wand-topk"
+OP_RANKED_TOPK = "ranked-topk"
+OP_DEVICE_RANKED = "device-ranked"
 
 #: physical operator → (capability requirement, one-line description); the
 #: matrix ``serving.plan`` lowers through (also rendered by scripts/explain.py)
@@ -358,6 +363,16 @@ PHYSICAL_OPERATORS = {
                   "ILCP-style per-term (doc, tf) run structure"),
     OP_REDUCE_DOCLIST: ("(fallback, multi-term)",
                         "shifted/run intersection, then reduce to documents"),
+    OP_SCORED_RUNS: ("scoring stats present",
+                     "BM25 over the per-term (doc, tf) run structure"),
+    OP_SCORED_REDUCE: ("(fallback)",
+                       "decode postings, reduce positions to scored documents"),
+    OP_WAND_TOPK: ("scoring stats present",
+                   "MaxScore top-k: term upper bounds skip unreachable lists"),
+    OP_RANKED_TOPK: ("(fallback)",
+                     "exhaustive BM25 top-k over every matching document"),
+    OP_DEVICE_RANKED: ("device server + scoring stats",
+                       "device-side dense BM25 scatter-add + lax.top_k"),
 }
 
 

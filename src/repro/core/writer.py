@@ -33,8 +33,9 @@ from pathlib import Path
 import numpy as np
 
 from ..data.text import Vocabulary
+from .analyzer import get_analyzer
 from .artifact import ArtifactError, open_index, save_index
-from .index import DOC_SEP, NonPositionalIndex, PositionalIndex
+from .index import DOC_SEP, NonPositionalIndex, PositionalIndex, ScoringStats
 from .registry import (
     FAMILY_SELFINDEX,
     BuildSource,
@@ -73,8 +74,9 @@ class IndexWriter:
     """
 
     def __init__(self, path, store: str = "repair_skip", positional: bool = True,
-                 keep_text: bool = False, **store_kw):
+                 keep_text: bool = False, analyzer=None, **store_kw):
         get_backend_spec(store)  # unknown name -> ValueError up front
+        self.analyzer = get_analyzer(analyzer)
         self.path = Path(path)
         self._pending: list[str] = []
         manifest_path = self.path / WRITER_MANIFEST
@@ -85,15 +87,20 @@ class IndexWriter:
                     f"writer at {self.path} has format_version "
                     f"{m.get('format_version')!r}; this writer understands "
                     f"{WRITER_FORMAT_VERSION}")
+            recorded_analyzer = get_analyzer(m.get("analyzer")).config()
             recorded = (m["store"], m.get("store_kw", {}),
-                        bool(m["positional"]), bool(m.get("keep_text", False)))
-            if recorded != (store, store_kw, positional, keep_text):
+                        bool(m["positional"]), bool(m.get("keep_text", False)),
+                        recorded_analyzer)
+            if recorded != (store, store_kw, positional, keep_text,
+                            self.analyzer.config()):
                 raise ValueError(
                     f"writer at {self.path} was created with "
                     f"store={m['store']!r} store_kw={m.get('store_kw', {})} "
-                    f"positional={recorded[2]} keep_text={recorded[3]}; got "
+                    f"positional={recorded[2]} keep_text={recorded[3]} "
+                    f"analyzer={recorded_analyzer}; got "
                     f"store={store!r} store_kw={store_kw} "
-                    f"positional={positional} keep_text={keep_text} — "
+                    f"positional={positional} keep_text={keep_text} "
+                    f"analyzer={self.analyzer.config()} — "
                     f"segments of one writer share one configuration "
                     f"(IndexWriter.open resumes with the recorded one)")
             self.store = m["store"]
@@ -123,6 +130,7 @@ class IndexWriter:
         m = json.loads(manifest_path.read_text())
         return cls(path, store=m["store"], positional=bool(m["positional"]),
                    keep_text=bool(m.get("keep_text", False)),
+                   analyzer=m.get("analyzer"),
                    **m.get("store_kw", {}))
 
     # ------------------------------------------------------------------
@@ -144,6 +152,7 @@ class IndexWriter:
             "store_kw": self.store_kw,
             "positional": self.positional,
             "keep_text": self.keep_text,
+            "analyzer": self.analyzer.config(),
             "version": self.version,
             "segments": [asdict(s) for s in self.segments],
         }
@@ -173,7 +182,8 @@ class IndexWriter:
         docs, self._pending = self._pending, []
         name = f"seg-{self.version:06d}"
         seg_dir = self.path / "segments" / name
-        idx = NonPositionalIndex.build(docs, store=self.store, **self.store_kw)
+        idx = NonPositionalIndex.build(docs, store=self.store,
+                                       analyzer=self.analyzer, **self.store_kw)
         save_index(idx, seg_dir / "nonpositional")
         n_tokens = 0
         if self.positional:
@@ -212,7 +222,7 @@ class IndexWriter:
             raise ValueError("nothing to compact: no segments committed")
         opened = [self.open_segment(s) for s in self.segments]
         merged_np = _merge_nonpositional([o[0] for o in opened], self.store,
-                                         self.store_kw)
+                                         self.store_kw, analyzer=self.analyzer)
         merged_pos = None
         if self.positional:
             merged_pos = _merge_positional([o[1] for o in opened], self.store,
@@ -281,13 +291,19 @@ def _segment_stream(pidx: PositionalIndex) -> np.ndarray:
 
 
 def _merge_nonpositional(seg_indexes: list[NonPositionalIndex], store: str,
-                         store_kw: dict) -> NonPositionalIndex:
+                         store_kw: dict, analyzer=None) -> NonPositionalIndex:
     spec = get_backend_spec(store)
     vocab = Vocabulary()
     need_stream = spec.family == FAMILY_SELFINDEX
     chunks: dict[int, list[np.ndarray]] = {}
     stream_parts: list[np.ndarray] = []
     doc_starts_parts: list[np.ndarray] = []
+    # scoring runs merge alongside the postings: segment doc-ids are
+    # disjoint ascending ranges, so concatenated per-term runs stay sorted
+    have_scoring = all(s.scoring is not None for s in seg_indexes)
+    run_chunks: dict[int, list[np.ndarray]] = {}
+    tf_chunks: dict[int, list[np.ndarray]] = {}
+    dl_parts: list[np.ndarray] = []
     doc_base = word_base = 0
     for seg in seg_indexes:
         idmap = _remap_vocab(vocab, seg.vocab)
@@ -295,6 +311,14 @@ def _merge_nonpositional(seg_indexes: list[NonPositionalIndex], store: str,
             lst = np.asarray(seg.store.get_list(old_id), dtype=np.int64)
             if len(lst):
                 chunks.setdefault(int(idmap[old_id]), []).append(lst + doc_base)
+        if have_scoring:
+            dl_parts.append(np.asarray(seg.scoring.doc_lengths, dtype=np.int64))
+            for old_id in range(len(seg.vocab)):
+                rd, rt = seg.scoring.term_runs(old_id)
+                if len(rd):
+                    nid = int(idmap[old_id])
+                    run_chunks.setdefault(nid, []).append(rd + doc_base)
+                    tf_chunks.setdefault(nid, []).append(rt)
         if need_stream:
             seg_stream = np.asarray(seg.store.to_arrays()["stream"], dtype=np.int64)
             stream_parts.append(idmap[seg_stream])
@@ -306,13 +330,35 @@ def _merge_nonpositional(seg_indexes: list[NonPositionalIndex], store: str,
              for w in range(len(vocab))]
     stream = np.concatenate(stream_parts) if stream_parts else None
     doc_starts = (np.concatenate(doc_starts_parts) if doc_starts_parts else None)
+    scoring = None
+    if have_scoring:
+        zero = np.zeros(0, dtype=np.int64)
+        run_offsets = np.zeros(len(vocab) + 1, dtype=np.int64)
+        max_tf = np.zeros(len(vocab), dtype=np.int64)
+        rd_flat: list[np.ndarray] = []
+        rt_flat: list[np.ndarray] = []
+        for w in range(len(vocab)):
+            rd = np.concatenate(run_chunks[w]) if w in run_chunks else zero
+            rt = np.concatenate(tf_chunks[w]) if w in tf_chunks else zero
+            run_offsets[w + 1] = run_offsets[w] + len(rd)
+            max_tf[w] = int(rt.max()) if len(rt) else 0
+            rd_flat.append(rd)
+            rt_flat.append(rt)
+        scoring = ScoringStats(
+            doc_lengths=(np.concatenate(dl_parts) if dl_parts
+                         else np.zeros(0, dtype=np.int64)),
+            run_docs=np.concatenate(rd_flat) if rd_flat else zero,
+            run_tfs=np.concatenate(rt_flat) if rt_flat else zero,
+            run_offsets=run_offsets, max_tf=max_tf)
     source = BuildSource(lists=lists, n_docs=doc_base, stream=stream,
                          doc_starts=doc_starts, doc_lists=True)
     built = build_backend(store, source, **store_kw)
     return NonPositionalIndex(
         vocab=vocab, store=built, n_docs=doc_base,
         collection_bytes=sum(s.collection_bytes for s in seg_indexes),
-        store_name=store, doc_starts=doc_starts, store_kw=dict(store_kw))
+        store_name=store, doc_starts=doc_starts, store_kw=dict(store_kw),
+        analyzer=None if analyzer is None else get_analyzer(analyzer),
+        scoring=scoring)
 
 
 def _merge_positional(seg_indexes: list[PositionalIndex], store: str,

@@ -3,7 +3,8 @@ the example, and the throughput benchmark).
 
 Query strings in the planner's surface syntax (`engine.parse_query`):
 ``w`` (word), ``w1 w2`` (AND), ``"w1 w2"`` (phrase sampled from real text,
-like the paper's query sets), ``top<k>: w1 w2`` (ranked),
+like the paper's query sets), ``top<k>: w1 w2`` (ranked AND),
+``rank<k>: w1 w2`` (BM25 ranked disjunction),
 ``docs: w1 w2`` / ``docs: "w1 w2"`` (document listing) and
 ``docs-top<k>: ...`` (ranked document retrieval).
 """
@@ -14,7 +15,7 @@ import numpy as np
 
 from .text import tokenize
 
-MIX_KINDS = ("word", "and", "phrase", "topk", "docs")
+MIX_KINDS = ("word", "and", "phrase", "topk", "docs", "rank")
 
 
 def sample_traffic(mix: str, n: int, docs: list[str], vocab_words: list[str],
@@ -38,6 +39,7 @@ def sample_traffic(mix: str, n: int, docs: list[str], vocab_words: list[str],
 
     gens = {"word": rand_word, "and": rand_and, "phrase": rand_phrase,
             "topk": lambda: f"top{k}: {rand_and()}",
+            "rank": lambda: f"rank{k}: {rand_and()}",
             "docs": lambda: f"docs: {rand_and()}",
             "docs-phrase": lambda: f"docs: {rand_phrase()}",
             "docs-topk": lambda: f"docs-top{k}: {rand_and()}"}

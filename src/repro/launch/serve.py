@@ -32,6 +32,7 @@ import time
 
 import numpy as np
 
+from ..core.analyzer import analyzer_names, get_analyzer
 from ..core.index import NonPositionalIndex, PositionalIndex
 from ..core.registry import backend_names, get_backend_spec
 from ..core.writer import IndexWriter
@@ -50,8 +51,13 @@ def main() -> None:
                     choices=backend_names(),
                     help="any registered backend — inverted store or self-index")
     ap.add_argument("--mode", type=str, default="and",
-                    choices=["and", "phrase", "topk", "docs", "docs-phrase",
-                             "docs-topk", "mixed"])
+                    choices=["and", "phrase", "topk", "rank", "docs",
+                             "docs-phrase", "docs-topk", "mixed"])
+    ap.add_argument("--analyzer", type=str, default="default",
+                    choices=analyzer_names(),
+                    help="analysis chain pinned into the non-positional "
+                         "index (build/save paths; --index-dir adopts the "
+                         "chain recorded in the artifact)")
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
     ap.add_argument("--explain", action="store_true",
                     help="print the physical plan of one query per distinct shape")
@@ -90,6 +96,7 @@ def main() -> None:
     spec = get_backend_spec(args.store)
     print(f"backend {spec.name}: family={spec.family} "
           f"caps=[{','.join(sorted(spec.capabilities)) or '-'}]")
+    print(f"analyzer {args.analyzer}: {get_analyzer(args.analyzer).config()}")
     col = generate_collection(n_articles=args.articles, versions_per_article=args.versions,
                               words_per_doc=200, seed=args.seed)
     # non-phrase docs: serves from the non-positional index; only phrase
@@ -110,7 +117,8 @@ def main() -> None:
             ap.error(f"--save-dir {args.save_dir} already holds a writer — "
                      f"serve it with --index-dir (and grow it with "
                      f"--ingest) or pick a fresh directory")
-        writer = IndexWriter(args.save_dir, store=args.store, positional=True)
+        writer = IndexWriter(args.save_dir, store=args.store, positional=True,
+                             analyzer=args.analyzer)
         per = max(1, -(-col.n_docs // max(1, args.commits)))
         t0 = time.perf_counter()
         for c in range(0, col.n_docs, per):
@@ -123,7 +131,8 @@ def main() -> None:
         live_dir = args.save_dir
     else:
         t0 = time.perf_counter()
-        idx = NonPositionalIndex.build(col.docs, store=args.store)
+        idx = NonPositionalIndex.build(col.docs, store=args.store,
+                                       analyzer=args.analyzer)
         print(f"built {args.store} non-positional index over {col.n_docs} docs "
               f"({100 * idx.space_fraction:.3f}% of collection) in {time.perf_counter()-t0:.2f}s")
         pidx = None
@@ -179,6 +188,12 @@ def main() -> None:
           f"({m['jit_traces'] - warm['jit_traces']} new, "
           f"{m['plans_compiled'] - warm['plans_compiled']} re-plans "
           f"on the repeated batch)")
+    if "ranked" in m:
+        r = m["ranked"]
+        print(f"ranked pruning: {r['postings_scored']} postings scored, "
+              f"{r['postings_skipped']} skipped "
+              f"(skip fraction {r['skip_fraction']:.2f}; "
+              f"{r['lists_skipped']} list(s) skipped)")
 
     agree = sum(1 for h, d in zip(host_results, results)
                 if np.array_equal(np.asarray(h), np.asarray(d)))

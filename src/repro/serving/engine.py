@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.anchors import AnchoredIndex, build_anchored, member_batch
+from ..core.doclist import BM25_B, BM25_K1, bm25_idf
 from ..core.index import NonPositionalIndex, PositionalIndex
 from ..core.registry import CAP_DEVICE_RESIDENT, capabilities_of
 from .plan import (  # noqa: F401  (re-exported: the legacy import surface)
@@ -41,6 +42,7 @@ from .plan import (  # noqa: F401  (re-exported: the legacy import surface)
     DOCS_TOPK,
     MAX_CAND_ROWS,
     PHRASE,
+    RANK,
     SERVER_KINDS,
     TOPK,
     WORD,
@@ -334,6 +336,40 @@ def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
     return serve
 
 
+def make_ranked_step(max_terms: int = 8, topk: int = 10):
+    """Batched device BM25 top-k over the scoring-run arrays.
+
+    Geometry: per query slot ``t`` the step gathers that term's padded
+    (doc, tf) run row, computes the BM25 contribution against the
+    precomputed per-document length norm, and scatter-adds it into a dense
+    ``(batch, n_docs)`` score matrix; ``lax.top_k`` then reduces each row
+    (ties → lowest doc id: scores are indexed by doc id and ``top_k`` is
+    stable).  A zero score means no query term occurs in the doc — BM25
+    contributions are strictly positive (log1p idf) — so ``scores > 0`` is
+    the validity mask and padding rows never surface.
+    """
+
+    def serve(index: dict, query_terms: jax.Array, query_lens: jax.Array,
+              row_start: jax.Array | int = 0):
+        del row_start  # dense scoring has no candidate window to sweep
+        b = query_terms.shape[0]
+        doc_norm = index["rank_doc_norm"]  # (n_docs,) k1*(1-b+b*dl/avgdl)
+        scores = jnp.zeros((b, doc_norm.shape[0]), jnp.float32)
+        rows = jnp.arange(b)[:, None]
+        for t in range(max_terms):
+            term = query_terms[:, t]
+            docs = index["rank_run_docs"][term]  # (B, Lmax)
+            tfs = index["rank_run_tfs"][term]
+            live = index["rank_run_valid"][term] & (t < query_lens)[:, None]
+            contrib = (index["rank_idf"][term][:, None] * tfs * (BM25_K1 + 1.0)
+                       / (tfs + doc_norm[docs]))
+            scores = scores.at[rows, docs].add(jnp.where(live, contrib, 0.0))
+        top_scores, top_docs = jax.lax.top_k(scores, topk)
+        return top_docs, top_scores, top_scores > 0.0
+
+    return serve
+
+
 def make_uihrdc_serve_step(max_terms: int = 8):
     """The AND-only step of the ``uihrdc`` dry-run arch (kept as the
     compiled entry point; see :func:`make_serve_step` for phrase/top-k)."""
@@ -390,8 +426,37 @@ class BatchedServer:
         if isinstance(index, PositionalIndex):
             # device-side position -> document mapping for doc listing
             arrays["doc_starts"] = jnp.asarray(index.doc_starts, jnp.int32)
+        kinds = SERVER_KINDS
+        scoring = getattr(index, "scoring", None)
+        if isinstance(index, NonPositionalIndex) and scoring is not None:
+            # scoring runs as padded dense matrices: row per term, one
+            # (doc, tf) slot per posting — the device ranked step gathers
+            # rows, scatter-adds BM25 contributions, reduces with top_k
+            n_lists = len(scoring.max_tf)
+            n_docs = scoring.n_docs
+            lens = np.diff(scoring.run_offsets)
+            lmax = max(1, int(lens.max()) if n_lists else 1)
+            run_docs = np.zeros((n_lists, lmax), np.int32)
+            run_tfs = np.zeros((n_lists, lmax), np.float32)
+            run_valid = np.zeros((n_lists, lmax), bool)
+            for i in range(n_lists):
+                d, tf = scoring.term_runs(i)
+                run_docs[i, : len(d)] = d
+                run_tfs[i, : len(tf)] = tf
+                run_valid[i, : len(d)] = True
+            dl = scoring.doc_lengths.astype(np.float32)
+            avgdl = max(scoring.avgdl, 1e-9)
+            arrays["rank_run_docs"] = jnp.asarray(run_docs)
+            arrays["rank_run_tfs"] = jnp.asarray(run_tfs)
+            arrays["rank_run_valid"] = jnp.asarray(run_valid)
+            arrays["rank_doc_norm"] = jnp.asarray(
+                BM25_K1 * (1.0 - BM25_B + BM25_B * dl / avgdl), jnp.float32)
+            arrays["rank_idf"] = jnp.asarray(
+                [bm25_idf(int(ell), n_docs) for ell in lens], jnp.float32
+            ).reshape(n_lists)
+            kinds = SERVER_KINDS | {RANK}
         return cls(host_index=index, arrays=arrays,
-                   n_docs=float(index.universe_size), probe=probe)
+                   n_docs=float(index.universe_size), probe=probe, kinds=kinds)
 
     @property
     def trace_count(self) -> int:
@@ -412,10 +477,13 @@ class BatchedServer:
     def _step(self, kind: str, width: int, topk: int = 0, doclist: bool = False):
         key = (kind, width, topk, doclist)
         if key not in self._steps:
-            mode = PHRASE if kind == PHRASE else AND
-            raw = make_serve_step(max_terms=width, mode=mode, topk=topk,
-                                  n_docs=self.n_docs, probe=self.probe,
-                                  doclist=doclist)
+            if kind == RANK:
+                raw = make_ranked_step(max_terms=width, topk=topk)
+            else:
+                mode = PHRASE if kind == PHRASE else AND
+                raw = make_serve_step(max_terms=width, mode=mode, topk=topk,
+                                      n_docs=self.n_docs, probe=self.probe,
+                                      doclist=doclist)
 
             def counted(index, query_terms, query_lens, row_start=0, _raw=raw):
                 # this body runs only while jax traces (i.e. on a compile),
@@ -506,3 +574,26 @@ class BatchedServer:
         empty = np.zeros(0, np.int64)
         return [np.concatenate(g)[:k].astype(np.int64) if (o and g) else empty
                 for g, o in zip(got, ok)]
+
+    def ranked(self, queries: list[list[str]], k: int = 10,
+               width: int | None = None) -> list[np.ndarray]:
+        """Batched BM25 ranked disjunction: top-``k`` doc ids per query,
+        scored and reduced on device (see :func:`make_ranked_step`).  One
+        step covers the whole collection — dense scoring has no candidate
+        window — so a warmed (width, k) shape never retraces."""
+        if "rank_doc_norm" not in self.arrays:
+            raise ValueError(
+                f"this server holds no scoring arrays "
+                f"({self.host_index.store_name!r}): rebuild the index with "
+                f"scoring statistics to serve rank queries on device")
+        # duplicate query terms would scatter-add twice; the host scorer
+        # dedups, so dedup here for identical answers
+        queries = [list(dict.fromkeys(q)) for q in queries]
+        qt, ql, ok = self.encode(queries, width=width)
+        eff_k = min(int(k), int(self.arrays["rank_doc_norm"].shape[0]))
+        step = self._step(RANK, qt.shape[1], topk=eff_k)
+        docs, _scores, valid = step(self.arrays, jnp.asarray(qt), jnp.asarray(ql))
+        docs, valid = np.asarray(docs), np.asarray(valid)
+        empty = np.zeros(0, np.int64)
+        return [docs[i][valid[i]].astype(np.int64) if ok[i] else empty
+                for i in range(len(queries))]

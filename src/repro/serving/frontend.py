@@ -60,7 +60,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .plan import SERVER_KINDS, ParsedQuery, parse_query, width_bucket
+from .plan import RANK, SERVER_KINDS, ParsedQuery, parse_query, width_bucket
 from .session import Session
 
 
@@ -152,7 +152,12 @@ class ResultCache:
     sessions, an entry is stale iff some new segment knows **all** of its
     terms (only then can that segment contribute matches — answers merge
     per segment, and existing doc/token bases never move on append); every
-    other entry is *migrated* to the new segment shape.  A rewrite
+    other entry is *migrated* to the new segment shape.  Ranked
+    (``rank<k>:``) entries are disjunctive, so a new segment knowing
+    **any** of their terms invalidates them; an entry none of whose terms
+    occur in the new segments keeps its candidate set and is migrated
+    (global-statistics drift alone does not evict it — the cached
+    ranking ages out when its terms' postings next change).  A rewrite
     (compaction: ``added is None``) invalidates everything."""
 
     def __init__(self, capacity: int = 4096):
@@ -210,8 +215,11 @@ class ResultCache:
             fresh: OrderedDict[tuple, _CacheEntry] = OrderedDict()
             for key, entry in self._entries.items():
                 structure, terms, shape = key
+                # structure[0] is the query kind (see plan_key): ranked
+                # disjunctions are stale as soon as ANY term occurs
+                need = any if structure[0] == RANK else all
                 affected = shape != old_shape or any(
-                    all(term_known(child, t) for t in entry.terms)
+                    need(term_known(child, t) for t in entry.terms)
                     for child in added)
                 if affected:
                     self.invalidated += 1

@@ -54,9 +54,16 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass
 
+from ..core.analyzer import get_analyzer
+from ..core.doclist import bm25_upper_bound
 from ..core.registry import (
     CAP_SHIFTED_INTERSECT,
+    OP_DEVICE_RANKED,
     OP_DEVICE_SWEEP,
+    OP_RANKED_TOPK,
+    OP_SCORED_REDUCE,
+    OP_SCORED_RUNS,
+    OP_WAND_TOPK,
     capabilities_of,
     doclist_operator,
     intersect_operator,
@@ -73,13 +80,16 @@ PHRASE = "phrase"
 TOPK = "topk"
 DOCS = "docs"
 DOCS_TOPK = "docs_topk"
+RANK = "rank"
 
 _TOPK_RE = re.compile(r"^top(\d+):\s*(.+)$")
 _DOCS_RE = re.compile(r"^docs(?:-top(\d+))?:\s*(.+)$")
+_RANK_RE = re.compile(r"^rank(\d+):\s*(.+)$")
 
 GRAMMAR = (
     "accepted query grammar: 'w' (word) | 'w1 w2 ...' (AND) | "
     "'\"w1 w2 ...\"' (phrase) | 'top<k>: w1 w2' (ranked AND) | "
+    "'rank<k>: w1 w2' (BM25 ranked disjunction) | "
     "'docs: ...' / 'docs-top<k>: ...' (document listing), "
     "with k >= 1 and at least one non-empty term"
 )
@@ -88,16 +98,20 @@ GRAMMAR = (
 @dataclass(frozen=True)
 class ParsedQuery:
     """A classified query: ``kind`` in {word, and, phrase, topk, docs,
-    docs_topk}.  ``phrase`` marks doc-listing queries whose terms form a
-    contiguous phrase (``docs: "a b"``) rather than a conjunction."""
+    docs_topk, rank}.  ``phrase`` marks doc-listing queries whose terms
+    form a contiguous phrase (``docs: "a b"``) rather than a conjunction.
+    ``analyzed`` marks ``rank`` queries whose terms already went through
+    the index analyzer (analysis is not idempotent under stemming, so the
+    session must not re-apply it)."""
 
     kind: str
     terms: tuple[str, ...]
     k: int = 0
     phrase: bool = False
+    analyzed: bool = False
 
 
-def parse_query(q) -> ParsedQuery:
+def parse_query(q, analyzer=None) -> ParsedQuery:
     """Classify and validate a raw query.
 
     * ``list[str]`` — legacy batch form: one word → word, several → AND;
@@ -108,10 +122,17 @@ def parse_query(q) -> ParsedQuery:
     * ``"docs: w1 w2"`` / ``'docs: "w1 w2"'`` — document listing: distinct
       docs containing all words (resp. the exact phrase);
     * ``"docs-top<k>: ..."`` — ranked document retrieval: top-k docs by
-      pattern frequency.
+      pattern frequency;
+    * ``"rank<k>: w1 w2"`` — BM25 ranked disjunction: top-k docs matching
+      *any* term, scored by BM25 over the index scoring statistics.
+
+    ``analyzer`` (optional) runs ``rank`` query terms through the index
+    analysis chain at parse time — a query the chain strips to zero terms
+    (all stopwords) is malformed.
 
     Malformed inputs — empty / whitespace-only queries, empty phrases
-    (``""``), and zero-k ranked forms (``top0:`` / ``docs-top0:``) — raise
+    (``""``), zero-k ranked forms (``top0:`` / ``docs-top0:`` /
+    ``rank0:``), and analyzer-emptied ``rank`` queries — raise
     ``ValueError`` naming the accepted grammar.
     """
     if isinstance(q, ParsedQuery):
@@ -143,7 +164,21 @@ def parse_query(q) -> ParsedQuery:
         if int(m.group(1)) == 0:
             raise ValueError(f"top0 in {q!r}: k must be >= 1; {GRAMMAR}")
         return ParsedQuery(TOPK, tuple(m.group(2).split()), k=int(m.group(1)))
-    if re.match(r"^(docs(-top\d+)?|top\d+):", s):  # prefix with no terms
+    m = _RANK_RE.match(s)
+    if m:
+        if int(m.group(1)) == 0:
+            raise ValueError(f"rank0 in {q!r}: k must be >= 1; {GRAMMAR}")
+        terms = tuple(m.group(2).split())
+        analyzed = False
+        if analyzer is not None:
+            terms2 = get_analyzer(analyzer).query_terms(terms)
+            if not terms2:
+                raise ValueError(
+                    f"the analyzer stripped every term from {q!r} "
+                    f"(stopwords / separators only); {GRAMMAR}")
+            terms, analyzed = terms2, True
+        return ParsedQuery(RANK, terms, k=int(m.group(1)), analyzed=analyzed)
+    if re.match(r"^(docs(-top\d+)?|top\d+|rank\d+):", s):  # prefix, no terms
         raise ValueError(f"no terms after {s.split(':')[0] + ':'!r} in {q!r}; "
                          f"{GRAMMAR}")
     if len(s) >= 2 and s[0] == '"' and s[-1] == '"':
@@ -161,6 +196,8 @@ def unparse(pq: ParsedQuery) -> str:
         return f'"{body}"'
     if pq.kind == TOPK:
         return f"top{pq.k}: {body}"
+    if pq.kind == RANK:
+        return f"rank{pq.k}: {body}"
     if pq.kind in (DOCS, DOCS_TOPK):
         head = "docs:" if pq.kind == DOCS else f"docs-top{pq.k}:"
         return f'{head} "{body}"' if pq.phrase else f"{head} {body}"
@@ -197,10 +234,18 @@ class DocReduce(Logical):
 
 
 @dataclass(frozen=True)
+class ScoredReduce(Logical):
+    """Disjunctive scored retrieval: the union of the terms' documents,
+    each with its BM25 score over the index scoring statistics."""
+
+    terms: tuple[str, ...]
+
+
+@dataclass(frozen=True)
 class TopK(Logical):
     child: Logical
     k: int
-    score: str = "idf"  # "idf" (query-level proxy) | "tf" (per-doc freq)
+    score: str = "idf"  # "idf" proxy | "tf" pattern freq | "bm25" relevance
 
 
 @dataclass(frozen=True)
@@ -214,6 +259,9 @@ def logical_plan(q, extract: int | None = None) -> Logical:
     an :class:`Extract` of ``context=extract`` tokens per side)."""
     pq = parse_query(q)
     terms = pq.terms
+    if pq.kind == RANK:  # disjunctive: no intersection subtree
+        root: Logical = TopK(ScoredReduce(terms), k=pq.k or 10, score="bm25")
+        return Extract(root, context=extract) if extract is not None else root
     if pq.kind == PHRASE or (pq.phrase and len(terms) > 1):
         match: Logical = PhraseMatch(terms)
     elif len(terms) == 1:
@@ -272,12 +320,16 @@ def _target(ctx, pq: ParsedQuery):
 def plan_key(ctx, pq: ParsedQuery) -> tuple:
     """Hashable *shape* of a query's plan: everything :func:`route_query`
     depends on, with the concrete terms reduced to (count class,
-    all-known?).  Queries sharing a key share a compiled route and — on
-    the device — a jit-stable batch bucket."""
+    all-known?), plus the index's analyzer signature (two sessions over
+    differently-analyzed indexes never share plans or cached results).
+    Queries sharing a key share a compiled route and — on the device — a
+    jit-stable batch bucket."""
     index_name, idx, _ = _target(ctx, pq)
     known = idx is not None and all(idx.lookup(t) is not None for t in pq.terms)
+    analyzer = getattr(idx, "analyzer", None)
     return (pq.kind, index_name, min(len(pq.terms), 2), pq.k, pq.phrase,
-            known, width_bucket(len(pq.terms)))
+            known, width_bucket(len(pq.terms)),
+            None if analyzer is None else analyzer.signature())
 
 
 def result_cache_key(ctx, pq: ParsedQuery) -> tuple:
@@ -308,8 +360,10 @@ def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
     if idx is None:
         raise ValueError(f"{pq.kind} query requires the {index_name} index")
     # single-word reads are a pure list decode — nothing to batch — except
-    # phrase doc listing, where the device dedup collapses occurrences
-    multi_ok = len(pq.terms) > 1 or (pq.kind == DOCS and pq.phrase)
+    # phrase doc listing (device dedup collapses occurrences) and ranked
+    # retrieval (device scoring + top-k is the batched work)
+    multi_ok = (len(pq.terms) > 1 or (pq.kind == DOCS and pq.phrase)
+                or pq.kind == RANK)
     # non-phrase doc listing on the positional index (positional-only
     # engines) intersects per-term *document runs*, not positions — the
     # device AND step would intersect disjoint position lists
@@ -325,9 +379,19 @@ def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
         and all(idx.lookup(t) is not None for t in pq.terms)
     )
     if device_ok:
-        return Route(index_name, "device", f"anchored-{pq.kind}",
+        strategy = ("device-ranked" if pq.kind == RANK
+                    else f"anchored-{pq.kind}")  # rank scores dense runs,
+        # not anchored candidate windows
+        return Route(index_name, "device", strategy,
                      width=width_bucket(len(pq.terms)))
     caps = capabilities_of(idx.store)
+    if pq.kind == RANK:
+        # pruned when term upper bounds exist and there is more than one
+        # list to skip; a single list is fully scored either way
+        pruned = (getattr(idx, "scoring", None) is not None
+                  and len(pq.terms) > 1)
+        return Route(index_name, "host",
+                     "wand-maxscore" if pruned else "ranked-exhaustive")
     if pq.kind in (DOCS, DOCS_TOPK):
         return Route(index_name, "host",
                      doclist_operator(caps, index_name == "positional",
@@ -395,6 +459,44 @@ def _term_node(term: str, rows: int, caps) -> PhysicalOp:
     return PhysicalOp(op=op, rows=rows, cost=rows, detail=f"term {term!r}")
 
 
+def rank_pruning_estimate(idx, terms, k: int):
+    """Static MaxScore estimate for a ranked query: ``(n_full, n_prunable,
+    est_skip_fraction)`` — how many lists (sorted by descending BM25 upper
+    bound) must be fully scored, how many can only be probed for already-
+    seen candidates, and the fraction of total postings that skips full
+    traversal.  ``None`` when the index has no scoring statistics.
+
+    A list at position ``j`` is prunable once the preceding lists supply at
+    least ``k`` candidates (``cum_df >= k``) and the summed upper bound of
+    lists ``j..`` stays below the best list's bound — the execution-time
+    threshold θ (the k-th best full score) is at least one full best-list
+    contribution, so these lists cannot introduce a new top-k document.
+    """
+    scoring = getattr(idx, "scoring", None)
+    if scoring is None:
+        return None
+    n = scoring.n_docs
+    info = []
+    for t in terms:
+        tid = idx.lookup(t)
+        if tid is None:
+            continue
+        df = scoring.df(tid)
+        info.append((bm25_upper_bound(df, scoring.term_max_tf(tid), n), df))
+    if len(info) < 2:
+        return (len(info), 0, 0.0)
+    info.sort(key=lambda x: -x[0])
+    ubs = [u for u, _ in info]
+    dfs = [d for _, d in info]
+    total = sum(dfs)
+    cum = 0
+    for j in range(1, len(info)):
+        cum += dfs[j - 1]
+        if cum >= k and sum(ubs[j:]) < ubs[0]:
+            return (j, len(info) - j, sum(dfs[j:]) / max(1, total))
+    return (len(info), 0, 0.0)
+
+
 def _match_terms(node: Logical) -> tuple[str, ...]:
     """The leaf terms of a match subtree (TermScan/Intersect/PhraseMatch)."""
     if isinstance(node, TermScan):
@@ -451,6 +553,20 @@ def compile_query(ctx, q, prefer_device: bool = True,
     def lower(node: Logical) -> PhysicalOp:
         if isinstance(node, (TermScan, Intersect, PhraseMatch)):
             return lower_match(node)
+        if isinstance(node, ScoredReduce):
+            lens = [idx.term_length(t) for t in node.terms]
+            leaves = tuple(_term_node(t, r, caps)
+                           for t, r in zip(node.terms, lens))
+            rows = min(n_docs, sum(lens)) if n_docs else sum(lens)
+            if getattr(idx, "scoring", None) is not None:
+                op = OP_SCORED_RUNS
+                detail = "BM25 over per-term (doc, tf) runs + doc lengths"
+            else:
+                op = OP_SCORED_REDUCE
+                detail = "no scoring stats: decode postings, reduce to docs"
+            return PhysicalOp(op=op, rows=rows,
+                              cost=rows * max(1, len(node.terms)),
+                              detail=detail, children=leaves)
         child = lower(node.child)
         if isinstance(node, DocReduce):
             rows = min(child.rows, n_docs) if n_docs else child.rows
@@ -474,9 +590,35 @@ def compile_query(ctx, q, prefer_device: bool = True,
             return PhysicalOp(op=op, rows=rows, cost=cost, detail=detail,
                               children=(child,))
         if isinstance(node, TopK):
+            rows = min(node.k, child.rows) if child.rows else 0
+            if node.score == "bm25":
+                if rt.route == "device":
+                    return PhysicalOp(
+                        op=OP_DEVICE_RANKED, rows=rows,
+                        cost=child.cost + n_docs * _lg(node.k),
+                        detail=f"k={node.k} score=bm25; dense scatter-add "
+                               f"+ lax.top_k, width={rt.width}",
+                        children=(child,))
+                est = rank_pruning_estimate(idx, pq.terms, node.k)
+                if est is not None and est[1] > 0:
+                    n_full, n_prun, frac = est
+                    saved = round(child.cost * frac)
+                    return PhysicalOp(
+                        op=OP_WAND_TOPK, rows=rows,
+                        cost=max(1, child.cost - saved) + rows * _lg(node.k),
+                        detail=f"k={node.k} score=bm25; {n_full} fully-scored"
+                               f" + {n_prun} prunable list(s), est skip "
+                               f"{round(100 * frac)}%",
+                        children=(child,))
+                why = ("no scoring stats" if est is None
+                       else "upper bounds leave no list prunable")
+                return PhysicalOp(
+                    op=OP_RANKED_TOPK, rows=rows,
+                    cost=child.cost + child.rows * _lg(node.k),
+                    detail=f"k={node.k} score=bm25; exhaustive ({why})",
+                    children=(child,))
             op = "device-topk" if rt.route == "device" else f"topk-{node.score}"
-            return PhysicalOp(op=op,
-                              rows=min(node.k, child.rows) if child.rows else 0,
+            return PhysicalOp(op=op, rows=rows,
                               cost=child.cost + child.rows * _lg(node.k),
                               detail=f"k={node.k} score={node.score}",
                               children=(child,))

@@ -50,7 +50,11 @@ import numpy as np
 
 from ..core.artifact import MANIFEST_NAME, ArtifactError, open_index
 from ..core.doclist import (
+    BM25_B,
+    BM25_K1,
     DocRunIndex,
+    bm25_idf,
+    bm25_upper_bound,
     doc_list_terms,
     positions_to_doc_counts,
     positions_to_docs,
@@ -62,7 +66,9 @@ from .plan import (
     AND,
     DOCS,
     DOCS_TOPK,
+    GRAMMAR,
     PHRASE,
+    RANK,
     TOPK,
     WORD,
     ParsedQuery,
@@ -74,6 +80,7 @@ from .plan import (
     plan_key,
     result_cache_key,
     route_query,
+    unparse,
 )
 
 
@@ -109,6 +116,14 @@ class Session:
         self.plan_cache_hits = 0
         self.queries_executed = 0
         self.device_batches = 0
+        # ranked retrieval: MaxScore pruning toggle + work counters
+        # (a posting is one (doc, tf) run entry; scored + skipped = the
+        # total postings of the query's term lists)
+        self.rank_pruning = True
+        self.rank_postings_scored = 0
+        self.rank_postings_skipped = 0
+        self.rank_lists_scored = 0
+        self.rank_lists_skipped = 0
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -229,7 +244,7 @@ class Session:
         :func:`repro.serving.plan.result_cache_key`.  The segment-shape
         component means an answer computed against one committed segment
         set is never served against another."""
-        pq = parse_query(pq)
+        pq = self._parse(pq)
         ctx = self._segments[0].session if self._segments else self
         return result_cache_key(ctx, pq) + (self.segment_shape,)
 
@@ -248,13 +263,40 @@ class Session:
             return self._segments[0].session.index
         return self.index
 
+    @property
+    def analyzer(self):
+        """The analysis chain pinned into the served non-positional index
+        (None when the session has no such index).  Ranked queries are
+        analyzed with this chain before planning, so query terms match the
+        index terms exactly."""
+        ix = self.primary_index
+        return None if ix is None else ix.analyzer
+
+    def _parse(self, q) -> ParsedQuery:
+        """Parse ``q`` with the session's analyzer applied to ranked
+        queries.  Already-analyzed ``ParsedQuery`` objects pass through
+        untouched — stemming is not idempotent, so re-analysis would
+        corrupt the terms."""
+        a = self.analyzer
+        if isinstance(q, ParsedQuery):
+            if q.kind == RANK and not q.analyzed and a is not None:
+                terms = a.query_terms(q.terms)
+                if not terms:
+                    raise ValueError(
+                        f"the analyzer stripped every term from "
+                        f"{unparse(q)!r} (stopwords / separators only); "
+                        f"{GRAMMAR}")
+                return ParsedQuery(RANK, terms, k=q.k, analyzed=True)
+            return q
+        return parse_query(q, analyzer=a)
+
     # -- planning -------------------------------------------------------
     def plan(self, q, prefer_device: bool = True) -> Route:
         """The (cached) routing decision for one query shape.  Segmented
         sessions route against the first segment's context with the cache
         key extended by :attr:`segment_shape`, so a commit that changes
         the segment count re-plans while steady traffic never does."""
-        pq = parse_query(q)
+        pq = self._parse(q)
         ctx = self._segments[0].session if self._segments else self
         if not prefer_device:  # off-path (diagnostics): don't pollute the cache
             return route_query(ctx, pq, prefer_device=False)
@@ -276,7 +318,7 @@ class Session:
         segment runs the same shape; answers merge on offsets)."""
         raw = q if isinstance(q, str) else None
         ctx = self._segments[0].session if self._segments else self
-        cq = compile_query(ctx, q, extract=extract)
+        cq = compile_query(ctx, self._parse(q), extract=extract)
         if fmt == "json":
             out = explain_json(cq, raw=raw)
             if self._segments:
@@ -316,6 +358,20 @@ class Session:
             "plan_cache_hit_rate": round(hits / total, 4) if total else 0.0,
             "jit_traces": self.jit_traces,
         }
+        rank = {
+            "postings_scored": self.rank_postings_scored,
+            "postings_skipped": self.rank_postings_skipped,
+            "lists_scored": self.rank_lists_scored,
+            "lists_skipped": self.rank_lists_skipped,
+        }
+        for seg in self._segments:
+            for key in rank:
+                rank[key] += getattr(seg.session, f"rank_{key}")
+        if any(rank.values()):
+            scanned = rank["postings_scored"] + rank["postings_skipped"]
+            rank["skip_fraction"] = (
+                round(rank["postings_skipped"] / scanned, 4) if scanned else 0.0)
+            out["ranked"] = rank
         if self._segments:
             out["segments"] = len(self._segments)
         if self.frontend is not None:
@@ -334,7 +390,7 @@ class Session:
         offsets."""
         single = isinstance(queries, (str, ParsedQuery))
         batch = [queries] if single else list(queries)
-        parsed = [parse_query(q) for q in batch]
+        parsed = [self._parse(q) for q in batch]
         if self._segments:
             for pq in parsed:
                 self.plan(pq)  # warm/count the segment-shape route cache
@@ -356,6 +412,8 @@ class Session:
             sub = [list(parsed[i].terms) for i in idxs]
             if kind == TOPK:
                 res = server.topk(sub, k=k or 10, width=width)
+            elif kind == RANK:
+                res = server.ranked(sub, k=k or 10, width=width)
             elif kind == DOCS:
                 res = server.doclist(sub, phrase=phrase, width=width)
             elif kind == PHRASE:
@@ -374,9 +432,14 @@ class Session:
     def _execute_segmented(self, parsed: list[ParsedQuery]) -> list[np.ndarray]:
         scored_idx = [i for i, pq in enumerate(parsed)
                       if pq.kind == DOCS_TOPK]
-        plain_idx = [i for i, pq in enumerate(parsed) if pq.kind != DOCS_TOPK]
+        rank_idx = [i for i, pq in enumerate(parsed) if pq.kind == RANK]
+        plain_idx = [i for i, pq in enumerate(parsed)
+                     if pq.kind not in (DOCS_TOPK, RANK)]
         per_seg: list[list[np.ndarray]] = [[] for _ in parsed]
         scores: list[list[np.ndarray]] = [[] for _ in parsed]
+        gstats = (self._global_rank_stats(
+            {t for i in rank_idx for t in parsed[i].terms})
+            if rank_idx else None)
         for seg in self._segments:
             child = seg.session
             if plain_idx:
@@ -392,6 +455,16 @@ class Session:
                     list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
                 per_seg[i].append(docs + seg.doc_base if len(docs) else docs)
                 scores[i].append(tf)
+            for i in rank_idx:
+                pq = parsed[i]
+                # a doc lives in exactly one segment, so its full BM25 score
+                # is computable within that segment given the global stats;
+                # the union of per-segment top-k therefore covers the
+                # global top-k and the final rank_docs re-cut is exact
+                docs, sc = child._rank_scored(
+                    list(pq.terms), k=pq.k or 10, gstats=gstats)
+                per_seg[i].append(docs + seg.doc_base if len(docs) else docs)
+                scores[i].append(sc)
         out: list[np.ndarray] = []
         for i, pq in enumerate(parsed):
             parts = per_seg[i]
@@ -403,6 +476,11 @@ class Session:
                 tf = (np.concatenate(scores[i]) if scores[i]
                       else np.zeros(0, dtype=np.int64))
                 merged = rank_docs(merged, tf, pq.k or 10)
+            elif pq.kind == RANK:
+                sc = (np.concatenate(scores[i]) if scores[i]
+                      else np.zeros(0, dtype=np.float64))
+                order = np.argsort(merged, kind="stable")  # rank_docs wants sorted ids
+                merged = rank_docs(merged[order], sc[order], pq.k or 10)
             out.append(merged)
         return out
 
@@ -446,6 +524,8 @@ class Session:
             return self._doc_list(list(pq.terms), phrase=pq.phrase)
         if pq.kind == DOCS_TOPK:
             return self._doc_topk(list(pq.terms), k=pq.k or 10, phrase=pq.phrase)
+        if pq.kind == RANK:
+            return self._rank(list(pq.terms), k=pq.k or 10)
         raise ValueError(pq.kind)
 
     # -- host physical operators (the paper's sequential algorithms) ----
@@ -480,6 +560,111 @@ class Session:
             weights += np.log1p(self.index.n_docs / ell)
         order = np.argsort(-weights, kind="stable")
         return docs[order][:k]
+
+    # -- ranked retrieval (BM25 disjunction, MaxScore pruning) ----------
+    def _rank(self, terms: list[str], k: int = 10) -> np.ndarray:
+        docs, _ = self._rank_scored(terms, k=k)
+        return docs
+
+    def _rank_scored(self, terms: list[str], k: int = 10,
+                     gstats: dict | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Top-``k`` docs by BM25 over the OR of ``terms`` with their
+        scores, ties broken by lowest doc id.  Unknown terms contribute
+        nothing.  With :attr:`rank_pruning` the term lists are visited in
+        descending upper-bound order and traversal stops once the summed
+        bounds of the remaining lists cannot displace the current k-th
+        score (MaxScore) — every visited candidate is still scored against
+        *all* query terms, so pruning never changes the answer.
+
+        ``gstats`` (segmented serving) overrides the collection statistics
+        — global ``n_docs`` / ``avgdl`` and per-term global ``df`` — so
+        per-segment scores are directly comparable across segments."""
+        if self.index is None:
+            raise ValueError("rank queries require the nonpositional index")
+        scoring = self.index.scoring
+        if scoring is None:
+            raise ValueError(
+                f"rank queries need scoring statistics; the "
+                f"{self.index.store_name!r} index was opened without them — "
+                f"rebuild (or re-save) the index to record doc lengths and "
+                f"term frequencies")
+        empty = (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+        n_docs = int(gstats["n_docs"]) if gstats else scoring.n_docs
+        avgdl = float(gstats["avgdl"]) if gstats else scoring.avgdl
+        dl = scoring.doc_lengths
+        lists = []  # (docs, tfs, idf, upper_bound) per known term
+        for t in dict.fromkeys(terms):  # dedup, keep order
+            tid = self.index.vocab.get(t)
+            if tid is None:
+                continue
+            docs_t, tfs_t = scoring.term_runs(tid)
+            if len(docs_t) == 0:
+                continue
+            df = int(gstats["df"].get(t, len(docs_t))) if gstats else len(docs_t)
+            lists.append((docs_t, tfs_t.astype(np.float64), bm25_idf(df, n_docs),
+                          bm25_upper_bound(df, scoring.term_max_tf(tid), n_docs)))
+        if not lists:
+            return empty
+        lists.sort(key=lambda x: -x[3])
+        n_terms = len(lists)
+        suffix_ub = np.zeros(n_terms + 1)  # suffix_ub[j] = Σ ub of lists j..
+        for j in range(n_terms - 1, -1, -1):
+            suffix_ub[j] = suffix_ub[j + 1] + lists[j][3]
+        prune = self.rank_pruning and n_terms > 1
+
+        def score_all_terms(docs: np.ndarray) -> np.ndarray:
+            """Full BM25 of each doc across every query term (float64)."""
+            norm = BM25_K1 * (1.0 - BM25_B + BM25_B * dl[docs] / max(avgdl, 1e-9))
+            s = np.zeros(len(docs))
+            for docs_t, tfs_t, idf, _ in lists:
+                pos = np.minimum(np.searchsorted(docs_t, docs), len(docs_t) - 1)
+                hit = docs_t[pos] == docs
+                tf = np.where(hit, tfs_t[pos], 0.0)
+                s += idf * tf * (BM25_K1 + 1.0) / (tf + norm)
+            return s
+
+        cands = np.zeros(0, dtype=np.int64)
+        cscores = np.zeros(0)
+        theta = -np.inf  # current k-th best full score
+        for j, (docs_t, _tfs, _idf, _ub) in enumerate(lists):
+            if prune and j > 0 and len(cands) >= k and suffix_ub[j] < theta:
+                # no doc appearing only in the remaining lists can reach the
+                # top k: its score is ≤ suffix_ub[j] < theta (strictly below
+                # the k-th best, so exact even under doc-id tie-breaks)
+                self.rank_lists_skipped += n_terms - j
+                self.rank_postings_skipped += int(
+                    sum(len(rest[0]) for rest in lists[j:]))
+                break
+            self.rank_lists_scored += 1
+            self.rank_postings_scored += len(docs_t)
+            new = np.setdiff1d(docs_t, cands, assume_unique=True)
+            if len(new):
+                merged = np.concatenate([cands, new])
+                merged_s = np.concatenate([cscores, score_all_terms(new)])
+                order = np.argsort(merged, kind="stable")
+                cands, cscores = merged[order], merged_s[order]
+            if len(cands) >= k:
+                theta = float(np.partition(cscores, len(cscores) - k)[len(cscores) - k])
+        top = rank_docs(cands, cscores, k)
+        return top, cscores[np.searchsorted(cands, top)]
+
+    def _global_rank_stats(self, terms) -> dict:
+        """Collection-wide BM25 statistics across all segments — every
+        segment scores with the same ``n_docs`` / ``avgdl`` / per-term
+        ``df``, so per-segment top-k lists merge exactly."""
+        children = [seg.session.index for seg in self._segments]
+        n_docs = sum(ix.n_docs for ix in children)
+        total_terms = sum(ix.scoring.total_terms for ix in children
+                          if ix is not None and ix.scoring is not None)
+        df: dict[str, int] = {}
+        for t in terms:
+            df[t] = sum(
+                ix.scoring.df(tid) for ix in children
+                if ix is not None and ix.scoring is not None
+                and (tid := ix.vocab.get(t)) is not None)
+        return {"n_docs": n_docs,
+                "avgdl": total_terms / max(1, n_docs),
+                "df": df}
 
     # -- document listing (the docs: / docs-top<k>: workload) -----------
     def doc_runs(self) -> DocRunIndex:

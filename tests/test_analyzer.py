@@ -1,0 +1,142 @@
+"""Analyzer pipeline: one analysis chain at build time and query time.
+
+The contract under test: a term is produced by exactly one configurable
+chain (tokenize → case-fold → stopword-drop → stem), the chain is pinned
+into every persisted artifact, and a query-time mismatch is refused rather
+than silently mis-ranked (the stemmed index would simply miss unstemmed
+query terms otherwise).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.analyzer import (
+    ANALYZERS,
+    Analyzer,
+    analyzer_names,
+    get_analyzer,
+    stem_word,
+)
+from repro.core.artifact import ArtifactError, open_index, save_index
+from repro.core.index import NonPositionalIndex
+from repro.core.writer import IndexWriter
+from repro.serving.session import Session
+
+DOCS = [
+    "The Indexing indexes are indexed quickly",
+    "Compression compressed the compressing index",
+    "serve serving served servers",
+]
+
+
+# ----------------------------------------------------------------------
+# the chain itself
+# ----------------------------------------------------------------------
+def test_normalize_chain_order():
+    a = Analyzer()  # fold + stopwords, no stemming
+    assert a.normalize("Index") == "index"
+    assert a.normalize("The") is None  # folded BEFORE the stopword check
+    assert a.normalize("-") is None  # separators are not terms
+    assert Analyzer(case_fold=False).normalize("Index") == "Index"
+    assert Analyzer(drop_stopwords=False).normalize("The") == "the"
+
+
+def test_stemmer_is_deterministic_not_linguistic():
+    assert stem_word("indexing") == "index"
+    assert stem_word("indexed") == "index"
+    assert stem_word("indexes") == "index"
+    assert stem_word("servers") == "server"
+    assert stem_word("queries") == "query"  # ies -> y
+    # short stems are left alone rather than destroyed
+    assert stem_word("ed") == "ed"
+    assert stem_word("the") == "the"
+    # non-idempotent by design (why ParsedQuery carries `analyzed`):
+    # caressed -> caress -> cares -> car under repeated application
+    assert stem_word("caressed") == "caress"
+    assert stem_word(stem_word("caressed")) != stem_word("caressed")
+
+
+def test_stemmed_chain_unifies_inflections():
+    a = ANALYZERS["stemmed"]
+    assert {a.normalize(w) for w in
+            ("Indexing", "indexed", "indexes")} == {"index"}
+
+
+def test_config_round_trip_and_registry():
+    for name in analyzer_names():
+        a = get_analyzer(name)
+        assert Analyzer.from_config(a.config()) == a
+        assert get_analyzer(a.config()) == a
+        assert get_analyzer(a) is a
+    assert get_analyzer(None) == Analyzer()  # None adopts the default chain
+    with pytest.raises(ValueError, match="default"):
+        get_analyzer("no-such-chain")
+
+
+# ----------------------------------------------------------------------
+# build-time / query-time symmetry
+# ----------------------------------------------------------------------
+def test_stemmed_index_retrieves_across_inflections():
+    idx = NonPositionalIndex.build(DOCS, store="vbyte", analyzer="stemmed")
+    sess = Session(idx)
+    # every inflection of 'index' resolves to the same postings
+    want = np.asarray(sess.execute("index"))
+    assert len(want) > 0
+    for q in ("Indexing", "indexed", "indexes"):
+        assert np.array_equal(np.asarray(sess.execute(q)), want), q
+    # ranked queries analyze their terms before scoring: every inflection
+    # is the same analyzed query, so the rankings are byte-identical
+    r = np.asarray(sess.execute("rank3: Indexing"))
+    assert len(r) > 0
+    assert np.array_equal(r, np.asarray(sess.execute("rank3: indexed")))
+
+
+def test_default_index_keeps_inflections_distinct():
+    idx = NonPositionalIndex.build(DOCS, store="vbyte")  # no stemming
+    assert idx.word_id("indexing") != idx.word_id("indexes")
+
+
+# ----------------------------------------------------------------------
+# persistence pinning
+# ----------------------------------------------------------------------
+def test_artifact_pins_the_analyzer(tmp_path):
+    idx = NonPositionalIndex.build(DOCS, store="vbyte", analyzer="stemmed")
+    root = save_index(idx, tmp_path / "ix")
+    # silent adoption of the recorded chain
+    reopened = open_index(root)
+    assert reopened.analyzer == ANALYZERS["stemmed"]
+    # explicit agreement is fine
+    assert open_index(root, analyzer="stemmed").analyzer == ANALYZERS["stemmed"]
+    # a mismatched query-time chain is refused, naming both configs
+    with pytest.raises(ArtifactError, match="analyzer mismatch"):
+        open_index(root, analyzer="default")
+
+
+def test_writer_pins_the_analyzer(tmp_path):
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=False,
+                    analyzer="stemmed")
+    w.add_documents(DOCS)
+    w.commit()
+    # reopening with the recorded chain (or none) resumes
+    again = IndexWriter.open(tmp_path / "col")
+    assert again.analyzer == ANALYZERS["stemmed"]
+    # a conflicting chain is refused up front
+    with pytest.raises(ValueError, match="analyzer"):
+        IndexWriter(tmp_path / "col", store="vbyte", positional=False,
+                    analyzer="default")
+
+
+def test_segmented_session_analyzes_rank_queries(tmp_path):
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=False,
+                    analyzer="stemmed")
+    w.add_documents(DOCS[:2])
+    w.commit()
+    w.add_documents(DOCS[2:])
+    w.commit()
+    sess = Session.open(tmp_path / "col", device=False)
+    assert sess.analyzer == ANALYZERS["stemmed"]
+    one = Session(NonPositionalIndex.build(DOCS, store="vbyte",
+                                           analyzer="stemmed"))
+    for q in ("rank3: Indexing", "rank2: compressed serving"):
+        assert np.array_equal(np.asarray(sess.execute(q)),
+                              np.asarray(one.execute(q))), q

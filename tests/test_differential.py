@@ -55,11 +55,14 @@ class RefCase:
         # folded word-token sets / counts per doc (non-positional semantics)
         self.word_sets = []
         self.tok_lists = []
+        self.term_lists = []  # default-analyzer terms per doc (BM25 semantics)
         for doc in self.docs:
             toks = tokenize(doc)
             self.tok_lists.append(toks)
-            self.word_sets.append({t.lower() for t in toks if is_word_token(t)
-                                   and t.lower() not in STOPWORDS})
+            terms = [t.lower() for t in toks if is_word_token(t)
+                     and t.lower() not in STOPWORDS]
+            self.term_lists.append(terms)
+            self.word_sets.append(set(terms))
         # reference vocab (identical across backends): build once with vbyte
         self.ref_np = NonPositionalIndex.build(self.docs, store="vbyte")
         self.ref_pos = PositionalIndex.build(self.docs, store="vbyte",
@@ -87,6 +90,29 @@ class RefCase:
         pos = self.brute_phrase(toks)
         d = np.searchsorted(self.ref_pos.doc_starts, pos, side="right") - 1
         return np.unique(d)
+
+    def brute_bm25(self, words, k: int) -> np.ndarray:
+        """Independent BM25 top-k over the OR of ``words`` (float64,
+        Lucene-style non-negative idf, ties by lowest doc id) — the
+        reference every backend's ``rank<k>:`` answer must match."""
+        k1, b = 1.2, 0.75
+        n = len(self.term_lists)
+        avgdl = sum(len(t) for t in self.term_lists) / max(1, n)
+        scores = np.zeros(n)
+        for w in dict.fromkeys(words):  # dedup: one contribution per term
+            df = sum(1 for s in self.word_sets if w in s)
+            if df == 0:
+                continue  # unknown terms score nothing, query still answers
+            idf = np.log1p((n - df + 0.5) / (df + 0.5))
+            for d, terms in enumerate(self.term_lists):
+                tf = terms.count(w)
+                if tf:
+                    dl = len(terms)
+                    scores[d] += idf * tf * (k1 + 1) / (
+                        tf + k1 * (1 - b + b * dl / avgdl))
+        hit = np.nonzero(scores > 0)[0]
+        order = sorted(hit.tolist(), key=lambda d: (-scores[d], d))
+        return np.asarray(order[:k], dtype=np.int64)
 
     def brute_docs_topk(self, words, k: int) -> np.ndarray:
         docs = self.brute_docs(words)
@@ -117,6 +143,12 @@ class RefCase:
             ('docs: "' + " ".join(ph) + '"', self.brute_phrase_docs(ph)),
             (f"docs-top3: {w[1]} {w[2]}", self.brute_docs_topk([w[1], w[2]], 3)),
             ("docs: zzz-never-a-word", np.zeros(0, dtype=np.int64)),
+            (f"rank4: {w[1]} {w[2]}", self.brute_bm25([w[1], w[2]], 4)),
+            (f"rank3: {w[0]} {w[3]} {w[4]}",
+             self.brute_bm25([w[0], w[3], w[4]], 3)),
+            (f"rank5: {w[5]}", self.brute_bm25([w[5]], 5)),
+            (f"rank4: {w[2]} zzz-never-a-word",
+             self.brute_bm25([w[2], "zzz-never-a-word"], 4)),
         ]
         return out
 
@@ -237,6 +269,29 @@ def test_writer_three_commits_matches_one_shot(rt_case, store, tmp_path):
             f"compacted/one-shot drift: seed={case.seed} "
             f"edit_rate={case.rate} store={store!r} query={q!r} "
             f"compacted={np.asarray(g).tolist()} one_shot={w.tolist()}")
+
+
+def test_device_rank_matches_host(case):
+    """The dense device BM25 path (scatter-add + ``lax.top_k``, float32)
+    returns exactly the host MaxScore answers — and the brute reference."""
+    idx = NonPositionalIndex.build(case.docs, store="repair_skip")
+    dev = Session.build(idx, device=True)
+    host = Session.build(idx, device=False)
+    rng = np.random.default_rng(case.seed + 6)
+    queries = [q for q, _ in case.sample_queries(rng)
+               if parse_query(q).kind == "rank"]
+    refs = dict(case.sample_queries(np.random.default_rng(case.seed + 6)))
+    plans = [dev.plan(q) for q in queries]
+    assert any(p.route == "device" for p in plans), queries
+    for q, g in zip(queries, dev.execute(queries)):
+        h = np.asarray(host.execute(q))
+        assert np.array_equal(np.asarray(g), h), (
+            f"device/host rank drift: seed={case.seed} edit_rate={case.rate} "
+            f"query={q!r} device={np.asarray(g).tolist()} host={h.tolist()}")
+        assert np.array_equal(h, refs[q]), (
+            f"rank reference mismatch: seed={case.seed} "
+            f"edit_rate={case.rate} query={q!r} got={h.tolist()} "
+            f"want={refs[q].tolist()}")
 
 
 def test_device_doclist_matches_host(case):

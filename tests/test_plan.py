@@ -24,6 +24,7 @@ from repro.serving.plan import (
     DocReduce,
     Intersect,
     PhraseMatch,
+    ScoredReduce,
     TermScan,
     TopK,
     logical_plan,
@@ -56,12 +57,24 @@ def _host_session(store: str) -> Session:
     'docs: ""',                  # empty phrase doc listing
     "top0: a b",                 # zero-k ranked AND
     "docs-top0: a b",            # zero-k ranked retrieval
-    "docs:", "top5:", "docs-top3:   ",  # prefix with no terms at all
+    "rank0: a b",                # zero-k BM25 ranking
+    "docs:", "top5:", "docs-top3:   ", "rank3:",  # prefix with no terms at all
     [], (),                      # empty legacy list form
 ])
 def test_parse_query_rejects_malformed(bad):
     with pytest.raises(ValueError, match="accepted query grammar"):
         parse_query(bad)
+
+
+def test_parse_query_analyzer_strips_everything():
+    # every term is a stopword: the analyzed rank query has no terms left
+    with pytest.raises(ValueError, match="accepted query grammar"):
+        parse_query("rank3: the of and", analyzer="default")
+    with pytest.raises(ValueError, match="stripped every term"):
+        parse_query("rank3: the of and", analyzer="default")
+    # the raw chain keeps stopwords, so the same query parses
+    assert parse_query("rank3: the of and", analyzer="raw").terms == (
+        "the", "of", "and")
 
 
 def test_parse_query_accepts_the_grammar():
@@ -71,9 +84,13 @@ def test_parse_query_accepts_the_grammar():
     assert parse_query("top7: a b").k == 7
     assert parse_query("docs-top2: a b").k == 2
     assert parse_query('docs: "a b"').phrase
+    rq = parse_query("rank6: a b")
+    assert rq.kind == "rank" and rq.k == 6 and not rq.analyzed
+    assert parse_query("rank6: Plan b", analyzer="default").terms == ("plan", "b")
+    assert parse_query("rank6: Plan b", analyzer="default").analyzed
     # round trip: unparse(parse) is stable
     for q in ("a", "a b", '"a b"', "top7: a b", "docs: a b", 'docs: "a b"',
-              "docs-top2: a b", 'docs-top2: "a b"'):
+              "docs-top2: a b", 'docs-top2: "a b"', "rank6: a b"):
         assert unparse(parse_query(q)) == q
 
 
@@ -88,6 +105,10 @@ def test_logical_plan_tree_shapes():
     dt = logical_plan("docs-top2: a b")
     assert (isinstance(dt, TopK) and dt.score == "tf"
             and isinstance(dt.child, DocReduce) and dt.child.counts)
+    r = logical_plan("rank2: a b")
+    assert (isinstance(r, TopK) and r.score == "bm25"
+            and isinstance(r.child, ScoredReduce)
+            and r.child.terms == ("a", "b"))
 
 
 def test_width_bucket_powers_of_two():
@@ -169,6 +190,15 @@ self-doclist  rows~1 cost~8  (locate whole pattern, reduce to docs)
 └─ self-locate  rows~1 cost~7  (one native locate of the whole pattern)
    ├─ locate  rows~6 cost~6  (term 'grammar')
    └─ locate  rows~5 cost~5  (term 'index')""",
+    # ranked retrieval: upper-bound pruning surfaced in the plan — 'plan'
+    # (rare, high idf) is scored fully, 'grammar' (in every doc) prunable
+    ("repair_skip", "rank2: plan grammar"): """\
+query: rank2: plan grammar
+kind=rank index=nonpositional backend=repair_skip route=host strategy=wand-maxscore
+wand-topk  rows~2 cost~7  (k=2 score=bm25; 1 fully-scored + 1 prunable list(s), est skip 67%)
+└─ scored-doc-runs  rows~4 cost~8  (BM25 over per-term (doc, tf) runs + doc lengths)
+   ├─ list-decode  rows~2 cost~2  (term 'plan')
+   └─ list-decode  rows~4 cost~4  (term 'grammar')""",
 }
 
 GOLDEN_DEVICE = {
@@ -185,6 +215,13 @@ device-topk  rows~2 cost~136  (k=2 score=idf)
 └─ device-windowed-sweep  rows~4 cost~128  (1 window(s) x 64 candidates, probes on device, width=2)
    ├─ list-decode  rows~4 cost~4  (term 'grammar')
    └─ list-decode  rows~4 cost~4  (term 'query')""",
+    "rank2: plan grammar": """\
+query: rank2: plan grammar
+kind=rank index=nonpositional backend=repair_skip route=device strategy=device-ranked
+device-ranked  rows~2 cost~16  (k=2 score=bm25; dense scatter-add + lax.top_k, width=2)
+└─ scored-doc-runs  rows~4 cost~8  (BM25 over per-term (doc, tf) runs + doc lengths)
+   ├─ list-decode  rows~2 cost~2  (term 'plan')
+   └─ list-decode  rows~4 cost~4  (term 'grammar')""",
 }
 
 
@@ -246,6 +283,7 @@ def _mixed_batch(col, idx, rng):
         f"docs: {w[0]}", f"docs: {w[1]} {w[2]}",
         'docs: "' + " ".join(toks) + '"', f"docs-top3: {w[1]} {w[2]}",
         "zzz-unknown-term", f"{w[0]} zzz-unknown-term",
+        f"rank4: {w[1]} {w[2]}", f"rank3: {w[0]} zzz-unknown-term",
     ]
     rng.shuffle(batch)
     return batch
@@ -294,6 +332,33 @@ def test_repeated_mixed_batch_zero_replans_zero_retraces(diff_collection):
     # a genuinely new shape does compile (counters are live, not frozen)
     sess.execute("docs-top2: " + " ".join(batch[0].split()[:1]))
     assert sess.metrics()["plans_compiled"] == m2["plans_compiled"] + 1
+
+
+def test_warmed_ranked_traffic_full_hit_rate_zero_retraces(diff_collection):
+    """Acceptance: steady ranked traffic re-plans and re-traces nothing —
+    after the warming pass the plan-cache hit rate on repeated ``rank<k>:``
+    batches is 1.00 and the jit trace count is flat."""
+    col = diff_collection
+    idx = NonPositionalIndex.build(col.docs, store="repair_skip")
+    sess = Session.build(idx)
+    vocab = idx.vocab.id_to_token
+    rng = np.random.default_rng(29)
+    w = [vocab[int(rng.integers(len(vocab)))] for _ in range(8)]
+    batch = [f"rank4: {w[0]} {w[1]}", f"rank4: {w[2]} {w[3]}",
+             f"rank4: {w[4]} {w[5]}", f"rank4: {w[6]} {w[7]}"]
+    assert all(sess.plan(q).route == "device" for q in batch)
+    first = sess.execute(batch)
+    warm = sess.metrics()
+    fresh = Session.build(idx)
+    fresh.execute(batch)  # warm a fresh session, then measure only repeats
+    fresh.plans_compiled = fresh.plan_cache_hits = 0
+    for _ in range(3):
+        again = fresh.execute(batch)
+        for a, b in zip(again, first):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    m = fresh.metrics()
+    assert m["plan_cache_hit_rate"] == 1.0, m
+    assert m["jit_traces"] == warm["jit_traces"], "ranked traffic re-traced"
 
 
 def test_width_bucketing_shares_traces_across_term_counts(diff_collection):

@@ -1,0 +1,145 @@
+"""Ranked retrieval: BM25 top-k, MaxScore pruning exactness, device parity.
+
+The acceptance property: pruning is a pure work optimization.  A pruned
+``rank<k>:`` answer is byte-identical to the exhaustive one while scoring
+strictly fewer postings whenever the term upper bounds leave a list
+skippable; the device (dense scatter-add + ``lax.top_k``) and segmented
+(global-statistics per-segment scoring) paths return exactly the host
+answers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.doclist import bm25_idf, bm25_upper_bound
+from repro.core.index import NonPositionalIndex
+from repro.core.writer import IndexWriter
+from repro.data import generate_collection
+from repro.serving.plan import rank_pruning_estimate
+from repro.serving.session import Session
+
+SEED = 20260808
+
+
+@pytest.fixture(scope="module")
+def col():
+    return generate_collection(n_articles=2, versions_per_article=5,
+                               words_per_doc=60, edit_rate=0.3, seed=SEED)
+
+
+@pytest.fixture(scope="module")
+def idx(col):
+    return NonPositionalIndex.build(col.docs, store="vbyte")
+
+
+def _rank_queries(idx, rng, n=12):
+    vocab = idx.vocab.id_to_token
+    out = []
+    for i in range(n):
+        w = [vocab[int(rng.integers(len(vocab)))] for _ in range(2 + i % 3)]
+        out.append(f"rank{3 + i % 5}: " + " ".join(w))
+    return out
+
+
+def test_pruned_identical_to_exhaustive_with_strictly_fewer_postings(idx):
+    pruned = Session.build(idx, device=False)
+    exhaustive = Session.build(idx, device=False)
+    exhaustive.rank_pruning = False
+    queries = _rank_queries(idx, np.random.default_rng(SEED + 1))
+    for q, a, b in zip(queries, pruned.execute(queries),
+                       exhaustive.execute(queries)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"seed={SEED} query={q!r}: pruning changed the answer "
+            f"pruned={np.asarray(a).tolist()} "
+            f"exhaustive={np.asarray(b).tolist()}")
+    mp, me = pruned.metrics()["ranked"], exhaustive.metrics()["ranked"]
+    # exhaustive scores every posting of every list; pruning must have
+    # skipped some on this collection (multi-term queries, skewed bounds)
+    assert me["postings_skipped"] == 0 and me["lists_skipped"] == 0, me
+    assert mp["postings_scored"] < me["postings_scored"], (mp, me)
+    assert mp["postings_skipped"] > 0 and mp["skip_fraction"] > 0, mp
+    # the accounting is conserved: scored + skipped = the exhaustive work
+    assert (mp["postings_scored"] + mp["postings_skipped"]
+            == me["postings_scored"]), (mp, me)
+
+
+def test_theta_prune_condition_is_strict(idx):
+    """The k-th-score threshold uses strict ``<``: a suffix whose summed
+    bounds *equal* theta could still tie and win on doc id, so it must not
+    be skipped.  Pinned indirectly: every single-term query scores its one
+    list fully and skips nothing."""
+    sess = Session.build(idx, device=False)
+    vocab = idx.vocab.id_to_token
+    sess.execute([f"rank3: {vocab[3]}", f"rank5: {vocab[9]}"])
+    m = sess.metrics()["ranked"]
+    assert m["lists_skipped"] == 0 and m["postings_skipped"] == 0, m
+
+
+def test_segmented_rank_matches_one_shot(col, idx, tmp_path):
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=False)
+    third = len(col.docs) // 3
+    for lo in range(0, len(col.docs), third):
+        w.add_documents(col.docs[lo:lo + third])
+        w.commit()
+    seg = Session.open(tmp_path / "col", device=False)
+    one = Session.build(idx, device=False)
+    queries = _rank_queries(idx, np.random.default_rng(SEED + 2))
+    for q, a, b in zip(queries, seg.execute(queries), one.execute(queries)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"seed={SEED} query={q!r}: segmented rank drift "
+            f"segmented={np.asarray(a).tolist()} "
+            f"one_shot={np.asarray(b).tolist()}")
+    assert seg.metrics()["ranked"]["postings_scored"] > 0
+
+
+def test_device_rank_matches_host(idx):
+    dev = Session.build(idx, device=True)
+    host = Session.build(idx, device=False)
+    queries = _rank_queries(idx, np.random.default_rng(SEED + 3))
+    assert all(dev.plan(q).route == "device" for q in queries)
+    for q, a, b in zip(queries, dev.execute(queries), host.execute(queries)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"seed={SEED} query={q!r}: device rank drift "
+            f"device={np.asarray(a).tolist()} host={np.asarray(b).tolist()}")
+
+
+def test_rank_without_scoring_stats_is_a_clear_error(idx):
+    sess = Session.build(idx, device=False)
+    sess.index = NonPositionalIndex(
+        vocab=idx.vocab, store=idx.store, n_docs=idx.n_docs,
+        collection_bytes=idx.collection_bytes, store_name=idx.store_name,
+        doc_starts=idx.doc_starts, analyzer=idx.analyzer, scoring=None)
+    with pytest.raises(ValueError, match="scoring statistics"):
+        sess.execute("rank3: " + idx.vocab.id_to_token[0])
+
+
+def test_pruning_estimate_agrees_with_bounds(idx):
+    """The planner's static estimate marks a list prunable only when the
+    covered doc-frequency already reaches k and the remaining summed
+    bounds sit strictly below the best list's bound."""
+    vocab = idx.vocab.id_to_token
+    terms = (vocab[2], vocab[5], vocab[11])
+    est = rank_pruning_estimate(idx, terms, k=2)
+    assert est is not None
+    n_full, n_prunable, frac = est
+    assert n_full + n_prunable == len({t for t in terms
+                                       if idx.vocab.get(t) is not None})
+    assert 0.0 <= frac < 1.0
+    if n_prunable:
+        scoring = idx.scoring
+        ubs = sorted((bm25_upper_bound(
+            scoring.df(idx.vocab.get(t)),
+            scoring.term_max_tf(idx.vocab.get(t)), scoring.n_docs)
+            for t in terms), reverse=True)
+        assert sum(ubs[n_full:]) < ubs[0]
+    # no-scoring indexes report no estimate (exhaustive lowering)
+    bare = NonPositionalIndex(
+        vocab=idx.vocab, store=idx.store, n_docs=idx.n_docs,
+        collection_bytes=idx.collection_bytes, store_name=idx.store_name)
+    assert rank_pruning_estimate(bare, terms, k=2) is None
+
+
+def test_bm25_idf_is_nonnegative(idx):
+    n = idx.n_docs
+    for df in (1, n // 2, n):  # even a term in EVERY doc keeps idf > 0
+        assert bm25_idf(df, n) > 0.0

@@ -153,6 +153,46 @@ def test_commit_refresh_invalidates_exactly_affected_entries(tmp_path):
                           after["docs: zebra"])
 
 
+def test_commit_invalidates_exactly_affected_ranked_entries(tmp_path):
+    """Ranked entries are disjunctive: a commit mentioning *any* of a
+    ``rank<k>:`` query's terms invalidates it (here ``rank3: alpha zebra``
+    dies because the new segment knows alpha, even though it never mentions
+    zebra — the conjunctive all-terms rule would wrongly keep it), while a
+    ranked entry over terms the new segment doesn't know keeps serving from
+    cache.  Every post-commit answer equals a cold open."""
+    w = make_writer(tmp_path)
+    session = Session.open(w.path, device=False)
+
+    async def main():
+        fe = MicroBatchFrontend(session,
+                                FrontendConfig(max_batch=4, max_delay=0.001))
+        warm = ["rank3: alpha zebra", "rank2: zebra quartz"]
+        before = [np.asarray(r) for r in [await fe.submit(q) for q in warm]]
+        assert len(fe.cache) == len(warm)
+
+        w.add_documents(DOCS_V2)  # alpha/beta/gamma only — zebra untouched
+        w.commit()
+        await fe.refresh()
+        cache = fe.cache.metrics()
+        assert cache["invalidated"] == 1, cache
+        assert cache["migrated"] == 1, cache
+
+        hits0 = fe.cache.hits
+        after = {q: np.asarray(await fe.submit(q)) for q in warm}
+        # the zebra-quartz ranking was served straight from the migrated entry
+        assert fe.cache.hits == hits0 + 1, fe.cache.metrics()
+        return before, warm, after
+
+    before, warm, after = asyncio.run(main())
+    reference = dict(zip(warm, cold_answers(w.path, warm)))
+    for q in warm:
+        assert np.array_equal(after[q], np.asarray(reference[q])), \
+            f"(seed={BASE_SEED}, query={q!r}): stale ranked serve after commit"
+    # the commit really moved the alpha ranking: docs 4 and 5 mention alpha
+    assert not np.array_equal(before[0], after["rank3: alpha zebra"])
+    assert np.array_equal(before[1], after["rank2: zebra quartz"])
+
+
 def test_plain_refresh_drives_invalidation_too(tmp_path):
     """Invalidation hangs off Session.refresh() itself — a caller who
     never touches frontend.refresh() still gets a correct cache."""
