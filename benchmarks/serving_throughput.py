@@ -17,8 +17,14 @@ offsets.  Warmed traffic must still report plan-cache hit rate 1.00 and
 zero retraces (the segment shape is part of the cache key), which is the
 acceptance gate for the segment-aware serving path.
 
+Every row also records the device posting-array bytes and the layout that
+produced them (``--layout fused`` keeps the compressed Re-Pair arrays in
+HBM and decodes inside the sweep; ``dense`` ships the expand tables) —
+the memory-per-collection axis next to q/s.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py
     PYTHONPATH=src python benchmarks/serving_throughput.py --store repair_skip --probe vmap
+    PYTHONPATH=src python benchmarks/serving_throughput.py --layout dense
     PYTHONPATH=src python benchmarks/serving_throughput.py --segments 3
 """
 
@@ -43,8 +49,24 @@ BATCH_SIZES = (16, 64, 256)
 MIXES = ("word", "and", "phrase", "mixed")
 
 
+def _session_device_bytes(session: Session) -> tuple[int | None, str]:
+    """(summed HBM posting bytes, layout) across the session's attached
+    servers (segment children included); (None, "") when no server
+    reports them."""
+    sessions = ([s.session for s in getattr(session, "_segments", ())]
+                or [session])
+    tot, layout, seen = 0, "", False
+    for sess in sessions:
+        for srv in (sess.server, sess.positional_server):
+            if srv is not None and hasattr(srv, "device_bytes"):
+                tot += srv.device_bytes()
+                layout = getattr(srv, "layout", "")
+                seen = True
+    return (tot if seen else None), layout
+
+
 def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
-        seed: int = 0, segments: int = 0) -> list[dict]:
+        seed: int = 0, segments: int = 0, layout: str = "auto") -> list[dict]:
     col = generate_collection(n_articles=10, versions_per_article=25,
                               words_per_doc=200, seed=seed)
     workdir: Path | None = None
@@ -55,13 +77,18 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
         for c in range(0, col.n_docs, per):
             writer.add_documents(col.docs[c:c + per])
             writer.commit()
-        session = Session.open(workdir / "ix", probe=probe)
+        session = Session.open(workdir / "ix", probe=probe, layout=layout)
         host = Session.open(workdir / "ix", device=False)
     else:
         idx = NonPositionalIndex.build(col.docs, store=store)
         pidx = PositionalIndex.build(col.docs, store=store)
-        session = Session.build(idx, positional=pidx, probe=probe)
+        session = Session.build(idx, positional=pidx, probe=probe,
+                                layout=layout)
         host = Session(idx, positional=pidx)
+    device_bytes, res_layout = _session_device_bytes(session)
+    if device_bytes is not None:
+        print(f"device posting arrays: {device_bytes} bytes "
+              f"(layout={res_layout})")
     rng = np.random.default_rng(seed)
 
     words = [w for w in session.primary_index.vocab.id_to_token[:300]]
@@ -87,6 +114,8 @@ def run(store: str = "repair_skip", probe: str = "vmap", repeats: int = 3,
                 host_qps = bs / (time.perf_counter() - t0)
                 rows.append({"mix": mix, "batch_size": bs, "store": store,
                              "probe": probe, "segments": segments,
+                             "layout": res_layout,
+                             "device_bytes": device_bytes,
                              "device_qps": round(dev_qps, 1),
                              "host_qps": round(host_qps, 1),
                              "plan_cache_hit_rate": hit_rate,
@@ -110,6 +139,10 @@ def main() -> None:
     ap.add_argument("--store", type=str, default="repair_skip",
                     choices=backend_names(family=FAMILY_INVERTED))
     ap.add_argument("--probe", type=str, default="vmap", choices=["vmap", "kernel"])
+    ap.add_argument("--layout", type=str, default="auto",
+                    choices=["auto", "dense", "fused"],
+                    help="device posting layout: dense expand tables or "
+                         "fused decode-on-device (auto fuses Re-Pair stores)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--segments", type=int, default=0,
@@ -118,7 +151,7 @@ def main() -> None:
                          "Session.open (0 = in-memory single index)")
     args = ap.parse_args()
     rows = run(store=args.store, probe=args.probe, repeats=args.repeats,
-               seed=args.seed, segments=args.segments)
+               seed=args.seed, segments=args.segments, layout=args.layout)
     print(json.dumps({"serving_throughput": rows}))
 
 

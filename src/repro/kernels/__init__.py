@@ -2,6 +2,8 @@
 
 * dgap_decode      — blocked prefix-sum w/ carry: posting-list decompression
 * anchor_intersect — batched anchor probes: RePair-Skip on the VPU
+* fused_decode     — per-row bounded rule expansion (+ fused membership
+                     probe) for the compressed device layout
 * embedding_bag    — scalar-prefetch gather + bag-sum: recsys lookup
 * cin_interaction  — fused xDeepFM CIN layer on the MXU
 * flash_attention  — causal GQA flash forward (TPU fast path of models.flash)
@@ -15,6 +17,7 @@ from .dgap_decode.ops import dgap_decode
 from .embedding_bag.ops import embedding_bag
 from .flash_attention.ops import flash_attention_tpu
 from .flash_decode.ops import flash_decode
+from .fused_decode.ops import decode_rows, probe_rows
 from .moe_gemm.ops import moe_gemm
 
-__all__ = ["anchor_probe", "cin_layer", "dgap_decode", "embedding_bag", "flash_attention_tpu", "moe_gemm", "flash_decode"]
+__all__ = ["anchor_probe", "cin_layer", "decode_rows", "dgap_decode", "embedding_bag", "flash_attention_tpu", "moe_gemm", "flash_decode", "probe_rows"]

@@ -14,6 +14,11 @@ def dgap_decode(gaps: jax.Array, interpret: bool = False) -> jax.Array:
     Pads to the kernel tile, runs the Pallas blocked prefix sum, trims.
     """
     n = gaps.shape[0]
+    if n == 0:
+        # a (0, LANES) reshape would launch an empty Pallas grid — skip it
+        return jnp.zeros((0,), dtype=jnp.int32)
+    if n == 1:
+        return gaps.astype(jnp.int32) - 1
     tile = BLOCK_ROWS * LANES
     pad = (-n) % tile
     g = jnp.pad(gaps.astype(jnp.int32), (0, pad))

@@ -1,0 +1,3 @@
+from .ops import decode_rows, probe_rows
+
+__all__ = ["decode_rows", "probe_rows"]

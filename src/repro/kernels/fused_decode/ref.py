@@ -1,0 +1,29 @@
+"""NumPy reference for the fused decode/probe kernels."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def decode_rows_ref(gaps: np.ndarray, base: np.ndarray, lens: np.ndarray):
+    """gaps (R, L) prefix-sum rows, base (R,), lens (R,) ->
+    (values (R, L), valid (R, L)).
+
+    Row r decodes to base[r] + its prefix-summed gaps; lanes at or beyond
+    lens[r] are invalid (their values are the re-based garbage lanes,
+    matching the kernel).
+    """
+    gaps = np.asarray(gaps, dtype=np.int64)
+    r, l = gaps.shape
+    lane = np.arange(l)[None, :]
+    live = lane < np.asarray(lens).reshape(r, 1)
+    vals = np.asarray(base).reshape(r, 1) + gaps
+    return vals.astype(np.int32), live
+
+
+def probe_rows_ref(gaps: np.ndarray, base: np.ndarray, lens: np.ndarray,
+                   targets: np.ndarray) -> np.ndarray:
+    """Membership of targets[r] in row r's decoded expansion -> (R,) bool."""
+    vals, live = decode_rows_ref(gaps, base, lens)
+    t = np.asarray(targets).reshape(-1, 1)
+    return (live & (vals == t)).any(axis=1)

@@ -32,7 +32,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.anchors import AnchoredIndex, build_anchored, member_batch
+from ..core.anchors import (
+    AnchoredIndex,
+    CompressedAnchoredIndex,
+    build_anchored,
+    build_compressed_anchored,
+    member_batch,
+    member_batch_compressed,
+)
 from ..core.doclist import BM25_B, BM25_K1, bm25_idf
 from ..core.index import NonPositionalIndex, PositionalIndex
 from ..core.registry import CAP_DEVICE_RESIDENT, capabilities_of
@@ -226,22 +233,72 @@ def candidates_for(idx: AnchoredIndex, list_ids: jax.Array,
     return vals.reshape(b, -1), valid.reshape(b, -1)
 
 
-def _probe_terms(idx: AnchoredIndex, query_terms, query_lens, cand_vals, cand_valid,
+_PAD_VAL = 2**31 - 1  # anchor_intersect's sentinel (shifted targets stay below)
+
+
+def fused_candidates_for(idx: CompressedAnchoredIndex, list_ids: jax.Array,
+                         row_start: jax.Array | int = 0,
+                         decode=None) -> tuple[jax.Array, jax.Array]:
+    """Fused-layout counterpart of :func:`candidates_for`: the same
+    MAX_CAND_ROWS window, but each C entry decodes from the shared
+    prefix-summed pool (bounded by ``max_phrase``) instead of reading a
+    dense expand row.
+
+    ``decode`` swaps the decode implementation (inline anchor re-base by
+    default; the Pallas ``fused_decode`` kernel via ``probe="kernel"``).
+    Returns (values (B, C), valid (B, C)) in cumulative-gap space —
+    identical to the dense generator's output for the same store.
+    """
+    lo = idx.c_offsets[list_ids] + row_start
+    hi = idx.c_offsets[list_ids + 1]
+    rows = lo[:, None] + jnp.arange(MAX_CAND_ROWS)[None, :]
+    valid_rows = rows < hi[:, None]
+    rows = jnp.minimum(rows, idx.anchors.shape[0] - 1)
+    flat = rows.reshape(-1)
+    L = max(int(idx.max_phrase), 1)
+    base = idx.anchors[flat]
+    lens = jnp.where(valid_rows.reshape(-1), idx.c_len[flat], 0)
+    # (B*ROWS, L) contiguous prefix-sum row slices from the padded pool
+    # (the ragged gather stays outside the kernel)
+    psums = jax.vmap(
+        lambda p: jax.lax.dynamic_slice_in_dim(idx.pool, p, L)
+    )(idx.c_ptr[flat])
+    if decode is None:
+        valid = jnp.arange(L, dtype=jnp.int32)[None, :] < lens[:, None]
+        vals = base[:, None] + psums
+    else:
+        vals, valid = decode(psums, base, lens)
+    b = list_ids.shape[0]
+    return vals.reshape(b, -1), valid.reshape(b, -1)
+
+
+def _probe_terms(idx, query_terms, query_lens, cand_vals, cand_valid,
                  max_terms: int, phrase: bool, member=None):
     """AND / phrase probe loop shared by all steps.  For phrase queries term
     ``t`` probes candidate + t (offset-shifted intersection, §3).  ``member``
-    swaps the probe implementation (vmapped binary search by default; the
-    Pallas tiled-compare kernel via ``probe="kernel"``)."""
-    member = member or member_batch
+    swaps the probe implementation (vmapped binary search by default —
+    picked by index layout — or the Pallas kernels via ``probe="kernel"``)."""
+    if member is None:
+        member = (member_batch_compressed
+                  if isinstance(idx, CompressedAnchoredIndex) else member_batch)
     b, nc = cand_vals.shape
     match = cand_valid
     for t in range(1, max_terms):
         term = query_terms[:, t]
         active = (t < query_lens)[:, None]
-        shift = t if phrase else 0
         flat_ids = jnp.repeat(term, nc)
-        flat_vals = (cand_vals - 1 + shift).reshape(-1)  # to absolute postings
-        hit = member(idx, flat_ids, flat_vals).reshape(b, nc)
+        if phrase:
+            # shifted target is cand_vals + t in cumulative-gap space; clamp
+            # so postings near the top of the universe can neither wrap int32
+            # nor collide with the probe kernel's PAD_VAL sentinel
+            safe = cand_vals <= _PAD_VAL - 1 - t
+            shifted = jnp.where(safe, cand_vals, 0) - 1 + t
+        else:
+            safe = None
+            shifted = cand_vals - 1
+        hit = member(idx, flat_ids, shifted.reshape(-1)).reshape(b, nc)
+        if safe is not None:
+            hit = hit & safe
         match = match & jnp.where(active, hit, True)
     return match
 
@@ -253,6 +310,30 @@ def _kernel_member(interpret: bool):
         return member_batch_tpu(idx.anchors, idx.c_offsets, idx.expand,
                                 idx.expand_valid, list_ids, values,
                                 interpret=interpret)
+
+    return member
+
+
+def _kernel_member_fused(interpret: bool):
+    """Fused-layout kernel probe: ``anchor_intersect``'s sliced lower bound
+    finds the covering C entry, then ``fused_decode.probe_rows`` expands it
+    from the pool and compares — decoded postings never touch HBM."""
+    from ..kernels.anchor_intersect.ops import anchor_probe_sliced
+    from ..kernels.fused_decode.ops import probe_rows
+
+    def member(idx: CompressedAnchoredIndex, list_ids, values):
+        targets = values.astype(jnp.int32) + 1
+        lo = idx.c_offsets[list_ids]
+        hi = idx.c_offsets[list_ids + 1]
+        l = anchor_probe_sliced(targets, lo, hi, idx.anchors, interpret=interpret)
+        j = jnp.maximum(l - 1, lo)
+        L = max(int(idx.max_phrase), 1)
+        gaps = jax.vmap(
+            lambda p: jax.lax.dynamic_slice_in_dim(idx.pool, p, L)
+        )(idx.c_ptr[j])
+        hit = probe_rows(gaps, idx.anchors[j], idx.c_len[j], targets,
+                         interpret=interpret)
+        return hit & (lo < hi)
 
     return member
 
@@ -285,9 +366,24 @@ def _as_anchored(index: dict) -> AnchoredIndex:
     )
 
 
+def _as_compressed(index: dict, max_phrase: int) -> CompressedAnchoredIndex:
+    # max_phrase is a static decode bound, not an array — the step closure
+    # carries it (it would otherwise be traced away inside jit)
+    return CompressedAnchoredIndex(
+        anchors=index["anchors"],
+        c_offsets=index["c_offsets"],
+        c_ptr=index["c_ptr"],
+        c_len=index["c_len"],
+        pool=index["pool"],
+        lengths=index["lengths"],
+        max_phrase=max_phrase,
+    )
+
+
 def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
                     n_docs: float = 0.0, probe: str = "vmap",
-                    doclist: bool = False):
+                    doclist: bool = False, layout: str = "dense",
+                    max_phrase: int = 0):
     """Build a batched device step.
 
     ``mode`` is "and" (conjunctive doc queries) or "phrase" (offset-shifted
@@ -302,18 +398,38 @@ def make_serve_step(max_terms: int = 8, mode: str = AND, topk: int = 0,
     values are sorted within a window, so an entry is the first of its
     document iff its doc id exceeds the running maximum of everything
     before it.  ``probe="kernel"`` routes the inner membership probes
-    through the Pallas ``anchor_intersect`` tiled-compare kernel (interpret
-    mode off-TPU).
+    through the Pallas kernels (interpret mode off-TPU):
+    ``anchor_intersect`` tiled compares for the dense layout, plus
+    ``fused_decode`` expansion for the fused one.
+
+    ``layout`` selects the device memory model: "dense" reads the
+    ``(n_c, expand_len)`` expand tables; "fused" keeps only the compressed
+    arrays (anchors + rule-pool pointers, bound ``max_phrase``) in HBM and
+    decodes inside the sweep — byte-identical results either way.
     """
     phrase = mode == PHRASE
+    fused = layout == "fused"
+    interpret = jax.default_backend() != "tpu"
     member = None
+    decode = None
     if probe == "kernel":
-        member = _kernel_member(interpret=jax.default_backend() != "tpu")
+        if fused:
+            from ..kernels.fused_decode.ops import decode_rows
+
+            member = _kernel_member_fused(interpret=interpret)
+            decode = lambda g, b, n: decode_rows(g, b, n, interpret=interpret)
+        else:
+            member = _kernel_member(interpret=interpret)
 
     def serve(index: dict, query_terms: jax.Array, query_lens: jax.Array,
               row_start: jax.Array | int = 0):
-        idx = _as_anchored(index)
-        cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0], row_start)
+        if fused:
+            idx = _as_compressed(index, max_phrase)
+            cand_vals, cand_valid = fused_candidates_for(
+                idx, query_terms[:, 0], row_start, decode=decode)
+        else:
+            idx = _as_anchored(index)
+            cand_vals, cand_valid = candidates_for(idx, query_terms[:, 0], row_start)
         match = _probe_terms(idx, query_terms, query_lens, cand_vals, cand_valid,
                              max_terms, phrase, member=member)
         if doclist:
@@ -394,7 +510,9 @@ class BatchedServer:
     host_index: NonPositionalIndex | PositionalIndex
     arrays: dict[str, jax.Array]
     n_docs: float  # idf denominator (docs, or tokens for positional)
-    probe: str = "vmap"  # "vmap" | "kernel" (Pallas anchor_intersect)
+    probe: str = "vmap"  # "vmap" | "kernel" (Pallas anchor_intersect / fused_decode)
+    layout: str = "dense"  # "dense" (expand tables) | "fused" (decode-on-device)
+    max_phrase: int = 0  # fused layout's static decode bound (longest rule)
     #: device-step kinds this server can run (Session routes through this)
     kinds: frozenset = SERVER_KINDS
     _steps: dict = field(default_factory=dict)
@@ -410,19 +528,49 @@ class BatchedServer:
         if self._c_offsets_np is None:
             self._c_offsets_np = np.asarray(self.arrays["c_offsets"])
 
+    #: posting-layout array names (device-memory accounting; rank_* and
+    #: doc_starts are layout-independent extras)
+    _LAYOUT_ARRAYS = {
+        "dense": ("anchors", "c_offsets", "expand", "expand_valid", "lengths"),
+        "fused": ("anchors", "c_offsets", "c_ptr", "c_len", "pool", "lengths"),
+    }
+
     @classmethod
     def from_index(cls, index: NonPositionalIndex | PositionalIndex,
-                   expand_len: int = 32, probe: str = "vmap") -> "BatchedServer":
+                   expand_len: int = 32, probe: str = "vmap",
+                   layout: str = "auto") -> "BatchedServer":
         store = index.store
-        if CAP_DEVICE_RESIDENT in capabilities_of(store):
+        resident = CAP_DEVICE_RESIDENT in capabilities_of(store)
+        if layout == "auto":
+            # device-resident (Re-Pair) stores ship their compressed arrays
+            # to HBM and decode inside the sweep; everything else re-anchors
+            # into the dense expand tables as before
+            layout = "fused" if resident else "dense"
+        if layout not in cls._LAYOUT_ARRAYS:
+            raise ValueError(f"unknown layout {layout!r}")
+        max_phrase = 0
+        if layout == "fused":
+            if resident:  # the backend's own grammar compresses directly
+                cidx = CompressedAnchoredIndex.from_store(store)
+            else:  # re-compress from decoded lists (any registered backend)
+                lists = [store.get_list(i) for i in range(store.n_lists)]
+                cidx = build_compressed_anchored(lists)
+            arrays = {"anchors": cidx.anchors, "c_offsets": cidx.c_offsets,
+                      "c_ptr": cidx.c_ptr, "c_len": cidx.c_len,
+                      "pool": cidx.pool, "lengths": cidx.lengths}
+            max_phrase = cidx.max_phrase
+        elif resident:
             # the backend's own arrays anchor directly (no decode pass)
             aidx = AnchoredIndex.from_store(store, expand_len=expand_len)
+            arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+                      "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+                      "lengths": aidx.lengths}
         else:  # re-anchor from decoded lists (any registered backend)
             lists = [store.get_list(i) for i in range(store.n_lists)]
             aidx = build_anchored(lists, expand_len=expand_len)
-        arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
-                  "expand": aidx.expand, "expand_valid": aidx.expand_valid,
-                  "lengths": aidx.lengths}
+            arrays = {"anchors": aidx.anchors, "c_offsets": aidx.c_offsets,
+                      "expand": aidx.expand, "expand_valid": aidx.expand_valid,
+                      "lengths": aidx.lengths}
         if isinstance(index, PositionalIndex):
             # device-side position -> document mapping for doc listing
             arrays["doc_starts"] = jnp.asarray(index.doc_starts, jnp.int32)
@@ -456,11 +604,18 @@ class BatchedServer:
             ).reshape(n_lists)
             kinds = SERVER_KINDS | {RANK}
         return cls(host_index=index, arrays=arrays,
-                   n_docs=float(index.universe_size), probe=probe, kinds=kinds)
+                   n_docs=float(index.universe_size), probe=probe,
+                   layout=layout, max_phrase=max_phrase, kinds=kinds)
 
     @property
     def trace_count(self) -> int:
         return self.trace_events
+
+    def device_bytes(self) -> int:
+        """HBM bytes of the posting-layout arrays (the quantity the fused
+        layout shrinks; rank/doc-mapping extras are layout-independent)."""
+        return sum(self.arrays[k].size * self.arrays[k].dtype.itemsize
+                   for k in self._LAYOUT_ARRAYS[self.layout])
 
     def c_entries(self, list_id: int) -> int:
         """C-entry count of one list (window-sweep length; cost model)."""
@@ -483,7 +638,8 @@ class BatchedServer:
                 mode = PHRASE if kind == PHRASE else AND
                 raw = make_serve_step(max_terms=width, mode=mode, topk=topk,
                                       n_docs=self.n_docs, probe=self.probe,
-                                      doclist=doclist)
+                                      doclist=doclist, layout=self.layout,
+                                      max_phrase=self.max_phrase)
 
             def counted(index, query_terms, query_lens, row_start=0, _raw=raw):
                 # this body runs only while jax traces (i.e. on a compile),

@@ -275,13 +275,16 @@ class ReplicatedServer:
                           for s, n in zip(replicas, names)]
         self.kinds = frozenset.intersection(
             *[frozenset(getattr(r, "kinds", SERVER_KINDS)) for r in replicas])
+        # the replicas share one posting layout (plan keys / EXPLAIN read it)
+        self.layout = getattr(replicas[0], "layout", "")
         self._lock = threading.Lock()
         self.failovers = 0
         self.batches_dispatched = 0
 
     @classmethod
     def build(cls, index, n_replicas: int = 2, n_shards: int = 1,
-              expand_len: int = 32, probe: str = "vmap") -> "ReplicatedServer":
+              expand_len: int = 32, probe: str = "vmap",
+              layout: str = "auto") -> "ReplicatedServer":
         """Stamp out ``n_replicas`` servers over one built index: plain
         :class:`~repro.serving.engine.BatchedServer` replicas for
         ``n_shards == 1``, document-partitioned
@@ -298,7 +301,7 @@ class ReplicatedServer:
                     index, n_shards=n_shards, expand_len=expand_len))
             else:
                 replicas.append(BatchedServer.from_index(
-                    index, expand_len=expand_len, probe=probe))
+                    index, expand_len=expand_len, probe=probe, layout=layout))
         return cls(replicas)
 
     # -- dispatch -------------------------------------------------------
@@ -371,7 +374,7 @@ class ReplicatedServer:
 
 def replicated_session(index, positional=None, n_replicas: int = 2,
                        n_shards: int = 1, expand_len: int = 32,
-                       probe: str = "vmap") -> Session:
+                       probe: str = "vmap", layout: str = "auto") -> Session:
     """A :class:`Session` whose device path is a :class:`ReplicatedServer`
     per index — the N-replicas × M-shards serving layout behind one
     ``execute`` entry point."""
@@ -380,7 +383,8 @@ def replicated_session(index, positional=None, n_replicas: int = 2,
             return None
         return ReplicatedServer.build(ix, n_replicas=n_replicas,
                                       n_shards=n_shards,
-                                      expand_len=expand_len, probe=probe)
+                                      expand_len=expand_len, probe=probe,
+                                      layout=layout)
 
     return Session(index=index, positional=positional, server=rep(index),
                    positional_server=rep(positional))

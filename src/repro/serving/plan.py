@@ -297,6 +297,8 @@ class Route:
     route: str  # "host" | "device"
     strategy: str
     width: int = 0  # device bucket: terms padded to this width
+    layout: str = ""  # device memory model ("dense" | "fused"; "" = host /
+    # layout-independent step)
 
 
 def width_bucket(n_terms: int) -> int:
@@ -324,12 +326,13 @@ def plan_key(ctx, pq: ParsedQuery) -> tuple:
     differently-analyzed indexes never share plans or cached results).
     Queries sharing a key share a compiled route and — on the device — a
     jit-stable batch bucket."""
-    index_name, idx, _ = _target(ctx, pq)
+    index_name, idx, server = _target(ctx, pq)
     known = idx is not None and all(idx.lookup(t) is not None for t in pq.terms)
     analyzer = getattr(idx, "analyzer", None)
     return (pq.kind, index_name, min(len(pq.terms), 2), pq.k, pq.phrase,
             known, width_bucket(len(pq.terms)),
-            None if analyzer is None else analyzer.signature())
+            None if analyzer is None else analyzer.signature(),
+            getattr(server, "layout", ""))
 
 
 def result_cache_key(ctx, pq: ParsedQuery) -> tuple:
@@ -382,8 +385,11 @@ def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
         strategy = ("device-ranked" if pq.kind == RANK
                     else f"anchored-{pq.kind}")  # rank scores dense runs,
         # not anchored candidate windows
+        # the posting layout only shapes anchored sweeps; ranked scoring
+        # reads the dense (doc, tf) run arrays under either layout
+        layout = "" if pq.kind == RANK else getattr(server, "layout", "")
         return Route(index_name, "device", strategy,
-                     width=width_bucket(len(pq.terms)))
+                     width=width_bucket(len(pq.terms)), layout=layout)
     caps = capabilities_of(idx.store)
     if pq.kind == RANK:
         # pruned when term upper bounds exist and there is more than one
@@ -423,6 +429,7 @@ class CompiledQuery:
     route: str
     strategy: str
     root: PhysicalOp
+    layout: str = ""  # device posting layout ("dense" | "fused")
 
 
 def _lg(x: int) -> int:
@@ -537,7 +544,8 @@ def compile_query(ctx, q, prefer_device: bool = True,
             op, detail = OP_DEVICE_SWEEP, (
                 f"{n_windows} window(s) x {MAX_CAND_ROWS} candidates, "
                 f"{'shifted ' if shifted else ''}probes on device, "
-                f"width={rt.width}")
+                f"width={rt.width}"
+                + (f", layout={rt.layout}" if rt.layout else ""))
         else:
             op = "self-locate" if CAP_SHIFTED_INTERSECT in caps and shifted \
                 else intersect_operator(caps)
@@ -632,7 +640,8 @@ def compile_query(ctx, q, prefer_device: bool = True,
     root = lower(logical_plan(pq, extract=extract))
     return CompiledQuery(query=pq, index=rt.index,
                          backend=getattr(idx, "store_name", "?"),
-                         route=rt.route, strategy=rt.strategy, root=root)
+                         route=rt.route, strategy=rt.strategy, root=root,
+                         layout=rt.layout)
 
 
 # ----------------------------------------------------------------------
@@ -657,7 +666,8 @@ def explain_text(cq: CompiledQuery, raw: str | None = None) -> str:
     lines = [
         f"query: {raw if raw is not None else unparse(cq.query)}",
         f"kind={cq.query.kind} index={cq.index} backend={cq.backend} "
-        f"route={cq.route} strategy={cq.strategy}",
+        f"route={cq.route} strategy={cq.strategy}"
+        + (f" layout={cq.layout}" if cq.layout else ""),
     ]
     _render(cq.root, lines, root=True)
     return "\n".join(lines)
@@ -673,7 +683,7 @@ def _node_dict(node: PhysicalOp) -> dict:
 
 
 def explain_json(cq: CompiledQuery, raw: str | None = None) -> dict:
-    return {
+    d = {
         "query": raw if raw is not None else unparse(cq.query),
         "kind": cq.query.kind,
         "index": cq.index,
@@ -682,3 +692,6 @@ def explain_json(cq: CompiledQuery, raw: str | None = None) -> dict:
         "strategy": cq.strategy,
         "plan": _node_dict(cq.root),
     }
+    if cq.layout:
+        d["layout"] = cq.layout
+    return d

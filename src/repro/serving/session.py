@@ -129,11 +129,14 @@ class Session:
     @classmethod
     def build(cls, index: NonPositionalIndex | None = None,
               positional: PositionalIndex | None = None, device: bool = True,
-              probe: str = "vmap", expand_len: int = 32) -> "Session":
+              probe: str = "vmap", expand_len: int = 32,
+              layout: str = "auto") -> "Session":
         """Build a session over already-built indexes, attaching batched
         device servers where that helps: self-index backends always serve
         natively on the host (their ``locate`` answers whole patterns — no
-        per-term probe loop to batch), so they get no server."""
+        per-term probe loop to batch), so they get no server.  ``layout``
+        picks the device posting memory model ("dense" | "fused"; "auto"
+        fuses device-resident Re-Pair stores, densifies the rest)."""
         from ..core.registry import FAMILY_SELFINDEX, get_backend_spec
         from .engine import BatchedServer
 
@@ -144,16 +147,16 @@ class Session:
         return cls(
             index=index, positional=positional,
             server=(BatchedServer.from_index(index, expand_len=expand_len,
-                                             probe=probe)
+                                             probe=probe, layout=layout)
                     if attach(index) else None),
             positional_server=(BatchedServer.from_index(
-                positional, expand_len=expand_len, probe=probe)
+                positional, expand_len=expand_len, probe=probe, layout=layout)
                 if attach(positional) else None))
 
     # -- persisted artifacts / segmented collections --------------------
     @classmethod
     def open(cls, path, device: bool = True, probe: str = "vmap",
-             expand_len: int = 32) -> "Session":
+             expand_len: int = 32, layout: str = "auto") -> "Session":
         """Serve a persisted index instead of rebuilding.
 
         ``path`` is either one artifact directory (``manifest.json``), a
@@ -163,7 +166,8 @@ class Session:
         segment, answers merged on the manifest's doc/token offsets.
         """
         p = Path(path)
-        open_kw = dict(device=device, probe=probe, expand_len=expand_len)
+        open_kw = dict(device=device, probe=probe, expand_len=expand_len,
+                       layout=layout)
         if is_writer_dir(p):
             sess = cls()
             sess._source_path = p

@@ -294,6 +294,28 @@ def test_device_rank_matches_host(case):
             f"want={refs[q].tolist()}")
 
 
+def test_fused_layout_matches_host(case):
+    """The fused device layout (compressed postings in HBM, decode inside
+    the sweep) returns byte-identical answers to the host route for every
+    query kind, at every edit rate — and matches the dense layout."""
+    idx = NonPositionalIndex.build(case.docs, store="repair_skip")
+    pidx = PositionalIndex.build(case.docs, store="repair_skip")
+    fused = Session.build(idx, positional=pidx, layout="fused")
+    dense = Session.build(idx, positional=pidx, layout="dense")
+    host = Session.build(idx, positional=pidx, device=False)
+    rng = np.random.default_rng(case.seed + 11)
+    for q, ref in case.sample_queries(rng):
+        g = np.asarray(fused.execute(q))
+        h = np.asarray(host.execute(q))
+        d = np.asarray(dense.execute(q))
+        assert np.array_equal(g, h), (
+            f"fused/host drift: seed={case.seed} edit_rate={case.rate} "
+            f"query={q!r} fused={g.tolist()} host={h.tolist()}")
+        assert np.array_equal(g, d), (
+            f"fused/dense drift: seed={case.seed} edit_rate={case.rate} "
+            f"query={q!r} fused={g.tolist()} dense={d.tolist()}")
+
+
 def test_device_doclist_matches_host(case):
     """The batched device listing path (segment-max dedup inside the
     windowed sweep) returns exactly the host answers."""

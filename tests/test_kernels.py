@@ -22,12 +22,57 @@ from repro.models.flash import flash_attention as flash_xla
 rng = np.random.default_rng(0)
 
 
-@pytest.mark.parametrize("n", [1, 511, 65536, 65537, 131072 + 13])
+@pytest.mark.parametrize("n", [1, 511, 65535, 65536, 65537, 131072 + 13])
 @pytest.mark.parametrize("hi", [2, 1000, 2**20])
 def test_dgap_decode(n, hi):
+    # n sweeps the kernel tile boundary (BLOCK_ROWS*LANES = 65536) ± 1
     g = jnp.asarray(rng.integers(1, hi, n), jnp.int32)
     got = dgap_decode(g, interpret=True)
     assert jnp.array_equal(got, jnp.cumsum(g) - 1)
+
+
+def test_dgap_decode_empty_and_single():
+    """Zero-length input used to hit an empty Pallas grid; n <= 1 shortcuts."""
+    out = dgap_decode(jnp.zeros((0,), jnp.int32), interpret=True)
+    assert out.shape == (0,) and out.dtype == jnp.int32
+    assert jnp.array_equal(dgap_decode(jnp.asarray([7], jnp.int32), interpret=True),
+                           jnp.asarray([6], jnp.int32))
+
+
+@pytest.mark.parametrize("r,l", [(0, 8), (1, 1), (3, 41), (255, 127), (256, 128), (257, 129)])
+def test_fused_decode_rows(r, l):
+    """Fused decode kernel vs the NumPy oracle across the RBLK/LANE tile
+    boundaries (256 rows x 128 lanes) ± 1."""
+    from repro.kernels.fused_decode.ops import decode_rows
+    from repro.kernels.fused_decode.ref import decode_rows_ref
+
+    gaps = rng.integers(1, 50, size=(r, l)).astype(np.int32)
+    lens = rng.integers(0, l + 1, size=r).astype(np.int32)
+    base = rng.integers(0, 10**6, size=r).astype(np.int32)
+    vals, valid = decode_rows(jnp.asarray(gaps), jnp.asarray(base),
+                              jnp.asarray(lens), interpret=True)
+    rvals, rvalid = decode_rows_ref(gaps, base, lens)
+    assert np.array_equal(np.asarray(valid), rvalid)
+    assert np.array_equal(np.asarray(vals)[rvalid], rvals[rvalid])
+
+
+@pytest.mark.parametrize("r,l", [(0, 8), (3, 41), (257, 129)])
+def test_fused_probe_rows(r, l):
+    """Fused decode+membership kernel vs the NumPy oracle: hits on real
+    row values, misses on values never decoded."""
+    from repro.kernels.fused_decode.ops import probe_rows
+    from repro.kernels.fused_decode.ref import decode_rows_ref, probe_rows_ref
+
+    gaps = rng.integers(1, 50, size=(r, l)).astype(np.int32)
+    lens = rng.integers(1, l + 1, size=r).astype(np.int32)
+    base = rng.integers(0, 10**6, size=r).astype(np.int32)
+    rvals, _ = decode_rows_ref(gaps, base, lens)
+    hit_lane = rng.integers(0, np.maximum(lens, 1))
+    targets = np.where(np.arange(r) % 2 == 0,
+                       rvals[np.arange(r), hit_lane], -5).astype(np.int32)
+    got = probe_rows(jnp.asarray(gaps), jnp.asarray(base), jnp.asarray(lens),
+                     jnp.asarray(targets), interpret=True)
+    assert np.array_equal(np.asarray(got), probe_rows_ref(gaps, base, lens, targets))
 
 
 @pytest.mark.parametrize("nq,na", [(1, 1), (7, 100), (300, 5000), (1024, 2048)])

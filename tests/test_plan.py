@@ -204,15 +204,15 @@ wand-topk  rows~2 cost~7  (k=2 score=bm25; 1 fully-scored + 1 prunable list(s), 
 GOLDEN_DEVICE = {
     '"grammar index"': """\
 query: "grammar index"
-kind=phrase index=positional backend=repair_skip route=device strategy=anchored-phrase
-device-windowed-sweep  rows~1 cost~128  (1 window(s) x 64 candidates, shifted probes on device, width=2)
+kind=phrase index=positional backend=repair_skip route=device strategy=anchored-phrase layout=fused
+device-windowed-sweep  rows~1 cost~128  (1 window(s) x 64 candidates, shifted probes on device, width=2, layout=fused)
 ├─ list-decode  rows~6 cost~6  (term 'grammar')
 └─ list-decode  rows~5 cost~5  (term 'index')""",
     "top2: grammar query": """\
 query: top2: grammar query
-kind=topk index=nonpositional backend=repair_skip route=device strategy=anchored-topk
+kind=topk index=nonpositional backend=repair_skip route=device strategy=anchored-topk layout=fused
 device-topk  rows~2 cost~136  (k=2 score=idf)
-└─ device-windowed-sweep  rows~4 cost~128  (1 window(s) x 64 candidates, probes on device, width=2)
+└─ device-windowed-sweep  rows~4 cost~128  (1 window(s) x 64 candidates, probes on device, width=2, layout=fused)
    ├─ list-decode  rows~4 cost~4  (term 'grammar')
    └─ list-decode  rows~4 cost~4  (term 'query')""",
     "rank2: plan grammar": """\
