@@ -25,8 +25,8 @@ from repro.data import generate_collection
 
 EDIT_RATES = (0.02, 0.3)
 # one backend per compression family (same picks as the test suite's
-# FAMILY_REPS): runs, LZ-hybrid, grammar, self-index
-FAMILY_REPS = ("rice_runs", "vbyte_lzend", "repair_skip", "rlcsa")
+# FAMILY_REPS): runs, LZ-hybrid, grammar, self-index, referential
+FAMILY_REPS = ("rice_runs", "vbyte_lzend", "repair_skip", "rlcsa", "rlz")
 
 
 def run(stores: tuple[str, ...] = FAMILY_REPS, seed: int = 0) -> list[dict]:

@@ -6,6 +6,12 @@ structures (linear chains, version trees, chaotic near-duplicates) and show
 the compressed sizes barely move — while Rice-Runs (which NEEDS doc-id
 locality) degrades on the chaotic ordering.
 
+The versioning-aware competitor is ``rlz``, which *mines* the structure
+itself (MinHash–LSH, ``repro.core.similarity``) instead of being told it.
+``--placement`` additionally compares cluster-aware commit placement on
+vs. off: reordering a shuffled (chaotic) batch so near-copies are
+adjacent restores the doc-id locality that gap-based codes need.
+
     PYTHONPATH=src python benchmarks/fig5_universality.py                 # all registered inverted backends
     PYTHONPATH=src python benchmarks/fig5_universality.py --stores rice_runs repair_skip
 """
@@ -20,7 +26,12 @@ from repro.data import generate_collection
 
 # curated subset used by the aggregate harness (benchmarks/run.py); the CLI
 # default is every registered inverted backend (--stores)
-STORES = ["rice_runs", "vbyte_lzma", "vbyte_lzend", "repair_skip", "ef_opt"]
+STORES = ["rice_runs", "vbyte_lzma", "vbyte_lzend", "repair_skip", "ef_opt",
+          "rlz"]
+
+# stores measured by the cluster-placement comparison: the locality-
+# sensitive gap codes plus the structure-miner itself
+PLACEMENT_STORES = ["rice_runs", "vbyte_lzend", "repair_skip", "rlz"]
 
 
 def run(stores: list[str] | None = None) -> list[dict]:
@@ -36,15 +47,47 @@ def run(stores: list[str] | None = None) -> list[dict]:
     return rows
 
 
+def run_placement(stores: list[str] | None = None) -> list[dict]:
+    """Cluster-aware placement on/off over the chaotic (shuffled) ordering.
+
+    Placement reorders docs by mined cluster before the build — the same
+    reordering ``IndexWriter.commit(cluster_placement=True)`` applies to
+    each batch — so gap codes see near-copies at adjacent doc ids.
+    """
+    from repro.core.analyzer import Analyzer
+    from repro.core.writer import _mine_buffer
+
+    col = generate_collection(n_articles=8, versions_per_article=30,
+                              words_per_doc=200, structure="chaotic", seed=41)
+    order = _mine_buffer(col.docs, Analyzer()).cluster_order()
+    placed = [col.docs[int(i)] for i in order]
+    rows = []
+    for store in stores or PLACEMENT_STORES:
+        for label, docs in (("off", col.docs), ("on", placed)):
+            idx = NonPositionalIndex.build(docs, store=store)
+            rows.append({"structure": "chaotic", "store": store,
+                         "placement": label,
+                         "space_pct": 100 * idx.space_fraction})
+            print(f"chaotic  {store:14s} placement={label:3s} "
+                  f"space={rows[-1]['space_pct']:7.3f}%", flush=True)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--stores", nargs="+", default=None, metavar="NAME",
                     choices=backend_names(family=FAMILY_INVERTED),
                     help="backends to measure (default: all registered inverted backends)")
+    ap.add_argument("--placement", action="store_true",
+                    help="also compare cluster-aware placement on/off on the "
+                         "chaotic ordering")
     args = ap.parse_args()
     stores = args.stores or backend_names(family=FAMILY_INVERTED)
     print("# Fig. 5 analogue — universality across versioning structures")
     run(stores)
+    if args.placement:
+        print("# cluster-aware placement (chaotic ordering)")
+        run_placement(args.stores)
 
 
 if __name__ == "__main__":

@@ -73,6 +73,28 @@ LIFECYCLE_DIR=$(mktemp -d)
 trap 'rm -rf "$LIFECYCLE_DIR"' EXIT INT TERM
 python scripts/lifecycle_smoke.py "$LIFECYCLE_DIR"
 
+echo "== version mining: clusters -> rlz backend -> similar: queries =="
+python scripts/list_backends.py --require referential > /dev/null
+python - <<'PY'
+import numpy as np
+from repro.core.index import NonPositionalIndex
+from repro.data import generate_collection
+from repro.serving.session import Session
+
+col = generate_collection(n_articles=3, versions_per_article=6,
+                          words_per_doc=80, structure="tree", seed=5)
+idx = NonPositionalIndex.build(col.docs, store="rlz", mine_similarity=True)
+assert idx.similarity.purity(col.article_of) >= 0.9, "mined clusters impure"
+s = Session(idx)
+hits = s.execute("similar: 0")
+assert len(hits) and 0 not in hits, f"similar:0 smoke answer {hits}"
+versions = s.execute("versions-of: 0")
+assert 0 in versions and set(hits) <= set(versions.tolist()), \
+    f"versions-of:0 {versions} does not cover similar:0 {hits}"
+print(f"version mining OK: {idx.similarity.n_clusters} clusters, "
+      f"{idx.store.n_heads} rlz heads, similar:0 -> {len(hits)} docs")
+PY
+
 echo "== serving frontier: record benchmark runs into BENCH_*.json =="
 # small configurations — the point is the recorded trajectory (every CI
 # run appends its numbers next to its predecessors'), not peak load

@@ -135,6 +135,14 @@ def save_index(index: NonPositionalIndex | PositionalIndex, path) -> Path:
                 components[f"scoring.{key}"] = _write_component(
                     root, f"scoring.{key}",
                     np.asarray(getattr(scoring, key), dtype=np.int64))
+        similarity = getattr(index, "similarity", None)
+        if similarity is not None:
+            # pin the mining parameters alongside the signature arrays so
+            # similar:/versions-of: answers reopen byte-identically
+            meta["similarity"] = similarity.config.config()
+            for key, value in similarity.to_arrays().items():
+                components[f"similarity.{key}"] = _write_component(
+                    root, f"similarity.{key}", value)
     for key, value in backend_arrays(index.store_name, index.store).items():
         components[f"store.{key}"] = _write_component(root, f"store.{key}", value)
 
@@ -230,10 +238,20 @@ def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
                 run_tfs=np.asarray(loaded["scoring.run_tfs"], dtype=np.int64),
                 run_offsets=np.asarray(loaded["scoring.run_offsets"], dtype=np.int64),
                 max_tf=np.asarray(loaded["scoring.max_tf"], dtype=np.int64))
+        similarity = None
+        if "similarity.sigs" in loaded:
+            from .similarity import MinHashConfig, SimilarityIndex
+
+            similarity = SimilarityIndex.from_arrays(
+                {name[len("similarity."):]: value
+                 for name, value in loaded.items()
+                 if name.startswith("similarity.")},
+                MinHashConfig.from_config(meta.get("similarity")))
         return NonPositionalIndex(
             vocab=vocab, store=store, n_docs=int(meta["n_docs"]),
             collection_bytes=int(meta["collection_bytes"]),
             store_name=store_name, doc_starts=doc_starts,
-            store_kw=store_kw, analyzer=recorded, scoring=scoring)
+            store_kw=store_kw, analyzer=recorded, scoring=scoring,
+            similarity=similarity)
     raise ArtifactError(f"artifact at {root} has unknown kind "
                         f"{manifest['kind']!r}")

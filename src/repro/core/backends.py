@@ -30,6 +30,7 @@ from .registry import (
     CAP_DOC_LIST,
     CAP_EXTRACT,
     CAP_INTERSECT_CANDIDATES,
+    CAP_REFERENTIAL,
     CAP_SEEK,
     CAP_SHIFTED_INTERSECT,
     FAMILY_INVERTED,
@@ -37,6 +38,7 @@ from .registry import (
     BuildSource,
     register_backend,
 )
+from .rlz_store import RLZStore
 from .repair import RePairStore
 from .sampled_store import SampledVByteStore
 from .selfindex import LZ77Index, LZEndIndex, RLCSA, WCSA
@@ -151,6 +153,18 @@ def build_repair_skip_st(source: BuildSource, B: int = 1024):
                   doc="global LZ-End over concatenated Vbyte stream")
 def build_vbyte_lzend(source: BuildSource):
     return VbyteLZendStore.build(source.lists)
+
+
+# ----------------------------------------------------------------------
+# RLZ referential store (§1 competitor) — the structure-aware counterpoint:
+# version structure is mined (MinHash-LSH over the lists themselves), then
+# each list is stored as a diff against its cluster head.
+# ----------------------------------------------------------------------
+@register_backend("rlz", family=FAMILY_INVERTED, group="ours", paper="§1 (RLZ)",
+                  capabilities=(CAP_REFERENTIAL,),
+                  doc="referential lists vs MinHash-LSH mined cluster heads")
+def build_rlz(source: BuildSource):
+    return RLZStore.build(source.lists)
 
 
 # ----------------------------------------------------------------------

@@ -142,10 +142,12 @@ class NonPositionalIndex(_StatsMixin):
     store_kw: dict = field(default_factory=dict)  # build kwargs (persisted)
     analyzer: Analyzer | None = None      # build-time analysis chain
     scoring: ScoringStats | None = None   # BM25 substrate (doc runs + dl)
+    similarity: object | None = None      # mined SimilarityIndex (optional)
 
     @classmethod
     def build(cls, docs: list[str], store: str = "repair_skip", case_fold: bool = True,
-              drop_stopwords: bool = True, analyzer=None, **store_kw) -> "NonPositionalIndex":
+              drop_stopwords: bool = True, analyzer=None, mine_similarity: bool = False,
+              similarity_config=None, **store_kw) -> "NonPositionalIndex":
         spec = get_backend_spec(store)  # unknown name -> ValueError up front
         if analyzer is None:
             analyzer = Analyzer(case_fold=case_fold, drop_stopwords=drop_stopwords)
@@ -158,8 +160,11 @@ class NonPositionalIndex(_StatsMixin):
         stream: list[int] = []
         doc_starts = np.zeros(len(docs), dtype=np.int64)
         doc_lengths = np.zeros(len(docs), dtype=np.int64)
+        doc_terms: list[list[int]] | None = [] if mine_similarity else None
         for d, doc in enumerate(docs):
             doc_starts[d] = len(stream)
+            if doc_terms is not None:
+                doc_terms.append([])
             for tok in tokenize(doc):
                 w = analyzer.normalize(tok)
                 if w is None:
@@ -168,6 +173,8 @@ class NonPositionalIndex(_StatsMixin):
                 wid = vocab.add(w)
                 if need_stream:
                     stream.append(wid)
+                if doc_terms is not None:
+                    doc_terms[d].append(wid)
                 plist = postings.setdefault(wid, [])
                 tfs = tf_lists.setdefault(wid, [])
                 if plist and plist[-1] == d:
@@ -196,10 +203,20 @@ class NonPositionalIndex(_StatsMixin):
             doc_starts=doc_starts if need_stream else None,
             doc_lists=True)
         built = build_backend(store, source, **store_kw)
+        similarity = None
+        if mine_similarity:
+            from .similarity import MinHashConfig, SimilarityIndex
+
+            similarity = SimilarityIndex.mine(
+                [np.asarray(t, dtype=np.int64) for t in doc_terms],
+                MinHashConfig.from_config(similarity_config)
+                if not isinstance(similarity_config, MinHashConfig)
+                else similarity_config)
         return cls(vocab=vocab, store=built, n_docs=len(docs),
                    collection_bytes=sum(len(d) for d in docs), store_name=store,
                    doc_starts=doc_starts if need_stream else None,
-                   store_kw=dict(store_kw), analyzer=analyzer, scoring=scoring)
+                   store_kw=dict(store_kw), analyzer=analyzer, scoring=scoring,
+                   similarity=similarity)
 
     def word_id(self, w: str) -> int | None:
         # exact vocabulary hit first: index terms are already analyzed and

@@ -40,6 +40,10 @@ code:
                             ``to_arrays()`` exports pure array/bytes
                             components, the registered restore hook
                             reconstructs a byte-identical backend from them
+  ``referential``           lists are stored as differences against mined
+                            cluster heads (version-structure mining,
+                            ``repro.core.similarity``) — decoding a list
+                            may decode its head first (``rlz``)
   ========================  ====================================================
 
 * :func:`register_backend` — decorator placing a builder in the registry
@@ -71,10 +75,12 @@ CAP_DEVICE_RESIDENT = "device_resident"
 CAP_EXTRACT = "extract"
 CAP_DOC_LIST = "doc_list"
 CAP_PERSIST = "persist"
+CAP_REFERENTIAL = "referential"
 
 ALL_CAPABILITIES = frozenset({
     CAP_SEEK, CAP_INTERSECT_CANDIDATES, CAP_SHIFTED_INTERSECT,
     CAP_DEVICE_RESIDENT, CAP_EXTRACT, CAP_DOC_LIST, CAP_PERSIST,
+    CAP_REFERENTIAL,
 })
 
 # backend families
@@ -342,6 +348,9 @@ OP_SCORED_REDUCE = "scored-reduce"
 OP_WAND_TOPK = "wand-topk"
 OP_RANKED_TOPK = "ranked-topk"
 OP_DEVICE_RANKED = "device-ranked"
+OP_REFERENTIAL_MERGE = "referential-merge"
+OP_LSH_SIMILAR = "lsh-similar"
+OP_CLUSTER_VERSIONS = "cluster-versions"
 
 #: physical operator → (capability requirement, one-line description); the
 #: matrix ``serving.plan`` lowers through (also rendered by scripts/explain.py)
@@ -373,6 +382,12 @@ PHYSICAL_OPERATORS = {
                      "exhaustive BM25 top-k over every matching document"),
     OP_DEVICE_RANKED: ("device server + scoring stats",
                        "device-side dense BM25 scatter-add + lax.top_k"),
+    OP_REFERENTIAL_MERGE: ("referential",
+                           "decode head + diff records, galloping set-vs-set merge"),
+    OP_LSH_SIMILAR: ("similarity index present",
+                     "LSH bucket candidates filtered by estimated Jaccard"),
+    OP_CLUSTER_VERSIONS: ("similarity index present",
+                          "mined union-find cluster membership lookup"),
 }
 
 
@@ -387,6 +402,8 @@ def intersect_operator(caps: frozenset[str]) -> str:
         return OP_SELF_LOCATE
     if CAP_INTERSECT_CANDIDATES in caps:
         return OP_SAMPLED_SEEK if CAP_SEEK in caps else OP_COMPRESSED_SKIP
+    if CAP_REFERENTIAL in caps:
+        return OP_REFERENTIAL_MERGE
     return OP_SVS_MERGE
 
 

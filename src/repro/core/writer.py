@@ -74,7 +74,8 @@ class IndexWriter:
     """
 
     def __init__(self, path, store: str = "repair_skip", positional: bool = True,
-                 keep_text: bool = False, analyzer=None, **store_kw):
+                 keep_text: bool = False, analyzer=None, mine_similarity: bool = False,
+                 cluster_placement: bool = False, **store_kw):
         get_backend_spec(store)  # unknown name -> ValueError up front
         self.analyzer = get_analyzer(analyzer)
         self.path = Path(path)
@@ -90,23 +91,32 @@ class IndexWriter:
             recorded_analyzer = get_analyzer(m.get("analyzer")).config()
             recorded = (m["store"], m.get("store_kw", {}),
                         bool(m["positional"]), bool(m.get("keep_text", False)),
-                        recorded_analyzer)
+                        recorded_analyzer,
+                        bool(m.get("mine_similarity", False)),
+                        bool(m.get("cluster_placement", False)))
             if recorded != (store, store_kw, positional, keep_text,
-                            self.analyzer.config()):
+                            self.analyzer.config(), mine_similarity,
+                            cluster_placement):
                 raise ValueError(
                     f"writer at {self.path} was created with "
                     f"store={m['store']!r} store_kw={m.get('store_kw', {})} "
                     f"positional={recorded[2]} keep_text={recorded[3]} "
-                    f"analyzer={recorded_analyzer}; got "
+                    f"analyzer={recorded_analyzer} "
+                    f"mine_similarity={recorded[5]} "
+                    f"cluster_placement={recorded[6]}; got "
                     f"store={store!r} store_kw={store_kw} "
                     f"positional={positional} keep_text={keep_text} "
-                    f"analyzer={self.analyzer.config()} — "
+                    f"analyzer={self.analyzer.config()} "
+                    f"mine_similarity={mine_similarity} "
+                    f"cluster_placement={cluster_placement} — "
                     f"segments of one writer share one configuration "
                     f"(IndexWriter.open resumes with the recorded one)")
             self.store = m["store"]
             self.store_kw = dict(m.get("store_kw", {}))
             self.positional = bool(m["positional"])
             self.keep_text = bool(m.get("keep_text", False))
+            self.mine_similarity = bool(m.get("mine_similarity", False))
+            self.cluster_placement = bool(m.get("cluster_placement", False))
             self.version = int(m["version"])
             self.segments = [SegmentMeta(**s) for s in m["segments"]]
         else:
@@ -115,6 +125,8 @@ class IndexWriter:
             self.store_kw = dict(store_kw)
             self.positional = positional
             self.keep_text = keep_text
+            self.mine_similarity = mine_similarity
+            self.cluster_placement = cluster_placement
             self.version = 0
             self.segments: list[SegmentMeta] = []
             self._write_manifest()
@@ -131,6 +143,8 @@ class IndexWriter:
         return cls(path, store=m["store"], positional=bool(m["positional"]),
                    keep_text=bool(m.get("keep_text", False)),
                    analyzer=m.get("analyzer"),
+                   mine_similarity=bool(m.get("mine_similarity", False)),
+                   cluster_placement=bool(m.get("cluster_placement", False)),
                    **m.get("store_kw", {}))
 
     # ------------------------------------------------------------------
@@ -153,6 +167,8 @@ class IndexWriter:
             "positional": self.positional,
             "keep_text": self.keep_text,
             "analyzer": self.analyzer.config(),
+            "mine_similarity": self.mine_similarity,
+            "cluster_placement": self.cluster_placement,
             "version": self.version,
             "segments": [asdict(s) for s in self.segments],
         }
@@ -180,10 +196,18 @@ class IndexWriter:
         if not self._pending:
             raise ValueError("nothing to commit: add_documents first")
         docs, self._pending = self._pending, []
+        if self.cluster_placement:
+            # group near-copies onto adjacent doc ids before the store
+            # build: global compressors (Re-Pair, LZ-End) then see version
+            # runs even when the ingest order was chaotic
+            order = _mine_buffer(docs, self.analyzer).cluster_order()
+            docs = [docs[int(i)] for i in order]
         name = f"seg-{self.version:06d}"
         seg_dir = self.path / "segments" / name
         idx = NonPositionalIndex.build(docs, store=self.store,
-                                       analyzer=self.analyzer, **self.store_kw)
+                                       analyzer=self.analyzer,
+                                       mine_similarity=self.mine_similarity,
+                                       **self.store_kw)
         save_index(idx, seg_dir / "nonpositional")
         n_tokens = 0
         if self.positional:
@@ -243,6 +267,27 @@ class IndexWriter:
         for seg in old:
             shutil.rmtree(self.segment_dir(seg), ignore_errors=True)
         return self.segments[0]
+
+
+# ----------------------------------------------------------------------
+# placement mining (commit internals)
+# ----------------------------------------------------------------------
+def _mine_buffer(docs: list[str], analyzer):
+    """Mine version structure over a buffered batch without building an
+    index: term ids are batch-local, which is all shingle hashing needs."""
+    from ..data.text import tokenize
+    from .similarity import SimilarityIndex
+
+    ids: dict[str, int] = {}
+    seqs = []
+    for doc in docs:
+        seq = []
+        for tok in tokenize(doc):
+            w = analyzer.normalize(tok)
+            if w is not None:
+                seq.append(ids.setdefault(w, len(ids)))
+        seqs.append(np.asarray(seq, dtype=np.int64))
+    return SimilarityIndex.mine(seqs)
 
 
 # ----------------------------------------------------------------------
@@ -353,12 +398,17 @@ def _merge_nonpositional(seg_indexes: list[NonPositionalIndex], store: str,
     source = BuildSource(lists=lists, n_docs=doc_base, stream=stream,
                          doc_starts=doc_starts, doc_lists=True)
     built = build_backend(store, source, **store_kw)
+    similarity = None
+    if all(s.similarity is not None for s in seg_indexes):
+        from .similarity import SimilarityIndex
+
+        similarity = SimilarityIndex.merge([s.similarity for s in seg_indexes])
     return NonPositionalIndex(
         vocab=vocab, store=built, n_docs=doc_base,
         collection_bytes=sum(s.collection_bytes for s in seg_indexes),
         store_name=store, doc_starts=doc_starts, store_kw=dict(store_kw),
         analyzer=None if analyzer is None else get_analyzer(analyzer),
-        scoring=scoring)
+        scoring=scoring, similarity=similarity)
 
 
 def _merge_positional(seg_indexes: list[PositionalIndex], store: str,

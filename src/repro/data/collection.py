@@ -57,7 +57,23 @@ class VersionedCollection:
             "versions_per_article": self.n_docs / max(1, arts),
             "avg_bytes_per_version": self.total_bytes / max(1, self.n_docs),
             "structure": self.structure,
+            # ground-truth cluster labels, doc id -> article id — for
+            # purity/recall assertions; mining itself must never read these
+            "article_of": self.article_of.tolist(),
         }
+
+    def similar_pairs(self) -> set[tuple[int, int]]:
+        """All ground-truth near-copy pairs ``(i, j)`` with ``i < j``: two
+        docs are a pair iff they are versions of the same article.  The
+        recall reference for mined clusterings."""
+        pairs: set[tuple[int, int]] = set()
+        arts = int(self.article_of.max()) + 1 if len(self.article_of) else 0
+        for a in range(arts):
+            members = np.flatnonzero(self.article_of == a)
+            for k, i in enumerate(members):
+                for j in members[k + 1:]:
+                    pairs.add((int(i), int(j)))
+        return pairs
 
 
 def _mutate(words: list[str], rng: np.random.Generator, rate: float, vocab: list[str]) -> list[str]:

@@ -9,6 +9,8 @@
 * flash_attention  — causal GQA flash forward (TPU fast path of models.flash)
 * moe_gemm         — grouped expert GEMM over the MoE dispatch buffer
 * flash_decode     — split-KV single-token decode attention (serve path)
+* minhash_sig      — batched MinHash signatures: min-reduction over hashed
+                     shingles (version-structure mining)
 """
 
 from .anchor_intersect.ops import anchor_probe
@@ -18,6 +20,7 @@ from .embedding_bag.ops import embedding_bag
 from .flash_attention.ops import flash_attention_tpu
 from .flash_decode.ops import flash_decode
 from .fused_decode.ops import decode_rows, probe_rows
+from .minhash_sig.ops import hash_params, minhash_signatures
 from .moe_gemm.ops import moe_gemm
 
-__all__ = ["anchor_probe", "cin_layer", "decode_rows", "dgap_decode", "embedding_bag", "flash_attention_tpu", "moe_gemm", "flash_decode", "probe_rows"]
+__all__ = ["anchor_probe", "cin_layer", "decode_rows", "dgap_decode", "embedding_bag", "flash_attention_tpu", "hash_params", "minhash_signatures", "moe_gemm", "flash_decode", "probe_rows"]

@@ -58,8 +58,10 @@ from ..core.analyzer import get_analyzer
 from ..core.doclist import bm25_upper_bound
 from ..core.registry import (
     CAP_SHIFTED_INTERSECT,
+    OP_CLUSTER_VERSIONS,
     OP_DEVICE_RANKED,
     OP_DEVICE_SWEEP,
+    OP_LSH_SIMILAR,
     OP_RANKED_TOPK,
     OP_SCORED_REDUCE,
     OP_SCORED_RUNS,
@@ -81,34 +83,41 @@ TOPK = "topk"
 DOCS = "docs"
 DOCS_TOPK = "docs_topk"
 RANK = "rank"
+SIMILAR = "similar"
+VERSIONS = "versions"
 
 _TOPK_RE = re.compile(r"^top(\d+):\s*(.+)$")
 _DOCS_RE = re.compile(r"^docs(?:-top(\d+))?:\s*(.+)$")
 _RANK_RE = re.compile(r"^rank(\d+):\s*(.+)$")
+_SIMILAR_RE = re.compile(r"^(similar|versions-of):\s*(.*)$")
 
 GRAMMAR = (
     "accepted query grammar: 'w' (word) | 'w1 w2 ...' (AND) | "
     "'\"w1 w2 ...\"' (phrase) | 'top<k>: w1 w2' (ranked AND) | "
     "'rank<k>: w1 w2' (BM25 ranked disjunction) | "
-    "'docs: ...' / 'docs-top<k>: ...' (document listing), "
-    "with k >= 1 and at least one non-empty term"
+    "'docs: ...' / 'docs-top<k>: ...' (document listing) | "
+    "'similar:<doc_id>' / 'versions-of:<doc_id>' (version mining, doc_id "
+    "a non-negative integer), with k >= 1 and at least one non-empty term"
 )
 
 
 @dataclass(frozen=True)
 class ParsedQuery:
     """A classified query: ``kind`` in {word, and, phrase, topk, docs,
-    docs_topk, rank}.  ``phrase`` marks doc-listing queries whose terms
-    form a contiguous phrase (``docs: "a b"``) rather than a conjunction.
-    ``analyzed`` marks ``rank`` queries whose terms already went through
-    the index analyzer (analysis is not idempotent under stemming, so the
-    session must not re-apply it)."""
+    docs_topk, rank, similar, versions}.  ``phrase`` marks doc-listing
+    queries whose terms form a contiguous phrase (``docs: "a b"``) rather
+    than a conjunction.  ``analyzed`` marks ``rank`` queries whose terms
+    already went through the index analyzer (analysis is not idempotent
+    under stemming, so the session must not re-apply it).  ``doc`` is the
+    subject doc id of the version-mining kinds (``similar:`` /
+    ``versions-of:``), -1 otherwise."""
 
     kind: str
     terms: tuple[str, ...]
     k: int = 0
     phrase: bool = False
     analyzed: bool = False
+    doc: int = -1
 
 
 def parse_query(q, analyzer=None) -> ParsedQuery:
@@ -124,7 +133,10 @@ def parse_query(q, analyzer=None) -> ParsedQuery:
     * ``"docs-top<k>: ..."`` — ranked document retrieval: top-k docs by
       pattern frequency;
     * ``"rank<k>: w1 w2"`` — BM25 ranked disjunction: top-k docs matching
-      *any* term, scored by BM25 over the index scoring statistics.
+      *any* term, scored by BM25 over the index scoring statistics;
+    * ``"similar:<doc_id>"`` — near-copies of a document (mined MinHash
+      signatures, estimated Jaccard >= the mining threshold);
+    * ``"versions-of:<doc_id>"`` — the document's mined version cluster.
 
     ``analyzer`` (optional) runs ``rank`` query terms through the index
     analysis chain at parse time — a query the chain strips to zero terms
@@ -178,6 +190,15 @@ def parse_query(q, analyzer=None) -> ParsedQuery:
                     f"(stopwords / separators only); {GRAMMAR}")
             terms, analyzed = terms2, True
         return ParsedQuery(RANK, terms, k=int(m.group(1)), analyzed=analyzed)
+    m = _SIMILAR_RE.match(s)
+    if m:
+        kind = SIMILAR if m.group(1) == "similar" else VERSIONS
+        body = m.group(2).strip()
+        if not body.isdigit():
+            raise ValueError(
+                f"{m.group(1)}: takes a single non-negative integer doc id, "
+                f"got {body!r} in {q!r}; {GRAMMAR}")
+        return ParsedQuery(kind, (), doc=int(body))
     if re.match(r"^(docs(-top\d+)?|top\d+|rank\d+):", s):  # prefix, no terms
         raise ValueError(f"no terms after {s.split(':')[0] + ':'!r} in {q!r}; "
                          f"{GRAMMAR}")
@@ -192,6 +213,10 @@ def parse_query(q, analyzer=None) -> ParsedQuery:
 def unparse(pq: ParsedQuery) -> str:
     """The canonical surface string of a parsed query."""
     body = " ".join(pq.terms)
+    if pq.kind == SIMILAR:
+        return f"similar:{pq.doc}"
+    if pq.kind == VERSIONS:
+        return f"versions-of:{pq.doc}"
     if pq.kind == PHRASE:
         return f'"{body}"'
     if pq.kind == TOPK:
@@ -242,6 +267,17 @@ class ScoredReduce(Logical):
 
 
 @dataclass(frozen=True)
+class SimilarLookup(Logical):
+    """Version-mining lookup: answered from the persisted signature index,
+    never from posting lists.  ``versions=False`` is the LSH candidate
+    scan (``similar:``), ``versions=True`` the mined cluster membership
+    (``versions-of:``)."""
+
+    doc: int
+    versions: bool = False
+
+
+@dataclass(frozen=True)
 class TopK(Logical):
     child: Logical
     k: int
@@ -259,6 +295,8 @@ def logical_plan(q, extract: int | None = None) -> Logical:
     an :class:`Extract` of ``context=extract`` tokens per side)."""
     pq = parse_query(q)
     terms = pq.terms
+    if pq.kind in (SIMILAR, VERSIONS):  # signature-index lookup, no postings
+        return SimilarLookup(pq.doc, versions=(pq.kind == VERSIONS))
     if pq.kind == RANK:  # disjunctive: no intersection subtree
         root: Logical = TopK(ScoredReduce(terms), k=pq.k or 10, score="bm25")
         return Extract(root, context=extract) if extract is not None else root
@@ -342,8 +380,13 @@ def result_cache_key(ctx, pq: ParsedQuery) -> tuple:
     query of one shape) this key is per-distinct-query: ``top3:`` and
     ``top5:`` over the same terms differ (``k`` is part of the shape), and
     the serving frontend appends the session's segment shape so an answer
-    computed against one segment set is never served against another."""
-    return (plan_key(ctx, pq), pq.terms)
+    computed against one segment set is never served against another.
+
+    The subject doc id of ``similar:``/``versions-of:`` rides in the
+    *structure* component (the cache contract downstream is the 3-tuple
+    ``(structure, terms, shape)``); those entries have no terms, so any
+    appended segment invalidates them."""
+    return (plan_key(ctx, pq) + (pq.doc,), pq.terms)
 
 
 def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
@@ -362,6 +405,11 @@ def route_query(ctx, pq: ParsedQuery, prefer_device: bool = True) -> Route:
     index_name, idx, server = _target(ctx, pq)
     if idx is None:
         raise ValueError(f"{pq.kind} query requires the {index_name} index")
+    if pq.kind in (SIMILAR, VERSIONS):
+        # answered from the persisted signature index — always host-side
+        return Route(index_name, "host",
+                     OP_CLUSTER_VERSIONS if pq.kind == VERSIONS
+                     else OP_LSH_SIMILAR)
     # single-word reads are a pure list decode — nothing to batch — except
     # phrase doc listing (device dedup collapses occurrences) and ranked
     # retrieval (device scoring + top-k is the batched work)
@@ -561,6 +609,20 @@ def compile_query(ctx, q, prefer_device: bool = True,
     def lower(node: Logical) -> PhysicalOp:
         if isinstance(node, (TermScan, Intersect, PhraseMatch)):
             return lower_match(node)
+        if isinstance(node, SimilarLookup):
+            sim = getattr(idx, "similarity", None)
+            if sim is None:
+                rows, detail = 0, "no similarity index mined"
+            else:
+                rows = max(1, sim.n_docs // max(1, sim.n_clusters))
+                detail = (f"doc={node.doc}; {sim.n_clusters} mined "
+                          f"cluster(s), {sim.config.num_perm} perms x "
+                          f"{sim.config.bands} bands")
+            op = OP_CLUSTER_VERSIONS if node.versions else OP_LSH_SIMILAR
+            cost = rows if node.versions else \
+                rows * (0 if sim is None else sim.config.num_perm)
+            return PhysicalOp(op=op, rows=rows, cost=max(1, cost),
+                              detail=detail)
         if isinstance(node, ScoredReduce):
             lens = [idx.term_length(t) for t in node.terms]
             leaves = tuple(_term_node(t, r, caps)

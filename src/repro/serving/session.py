@@ -69,7 +69,9 @@ from .plan import (
     GRAMMAR,
     PHRASE,
     RANK,
+    SIMILAR,
     TOPK,
+    VERSIONS,
     WORD,
     ParsedQuery,
     Route,
@@ -437,10 +439,17 @@ class Session:
         scored_idx = [i for i, pq in enumerate(parsed)
                       if pq.kind == DOCS_TOPK]
         rank_idx = [i for i, pq in enumerate(parsed) if pq.kind == RANK]
+        sim_idx = [i for i, pq in enumerate(parsed)
+                   if pq.kind in (SIMILAR, VERSIONS)]
         plain_idx = [i for i, pq in enumerate(parsed)
-                     if pq.kind not in (DOCS_TOPK, RANK)]
+                     if pq.kind not in (DOCS_TOPK, RANK, SIMILAR, VERSIONS)]
         per_seg: list[list[np.ndarray]] = [[] for _ in parsed]
         scores: list[list[np.ndarray]] = [[] for _ in parsed]
+        for i in sim_idx:
+            # version mining is segment-local: the subject doc's segment
+            # answers with local ids, shifted back to global (compaction
+            # re-links clusters across former segment boundaries)
+            per_seg[i].append(self._similar_segmented(parsed[i]))
         gstats = (self._global_rank_stats(
             {t for i in rank_idx for t in parsed[i].terms})
             if rank_idx else None)
@@ -488,6 +497,24 @@ class Session:
             out.append(merged)
         return out
 
+    def _similar_segmented(self, pq: ParsedQuery) -> np.ndarray:
+        """Dispatch ``similar:``/``versions-of:`` to the segment owning the
+        subject doc id (documents live in exactly one segment)."""
+        total = sum(s.session.index.n_docs for s in self._segments
+                    if s.session.index is not None)
+        for seg in self._segments:
+            ix = seg.session.index
+            if ix is None:
+                continue
+            if seg.doc_base <= pq.doc < seg.doc_base + ix.n_docs:
+                local = ParsedQuery(pq.kind, (), doc=pq.doc - seg.doc_base)
+                res = seg.session._execute_host(local)
+                return res + seg.doc_base if len(res) else res
+        raise ValueError(
+            f"doc id {pq.doc} in {unparse(pq)!r} is out of range: the "
+            f"collection has {total} documents (valid ids 0..{total - 1}); "
+            f"{GRAMMAR}")
+
     def _doc_topk_scored(self, terms: list[str], k: int = 10,
                          phrase: bool = False) -> tuple[np.ndarray, np.ndarray]:
         """Top-``k`` docs by pattern frequency *with their scores* — the
@@ -514,6 +541,8 @@ class Session:
                                dtype=np.int64)
 
     def _execute_host(self, pq: ParsedQuery) -> np.ndarray:
+        if pq.kind in (SIMILAR, VERSIONS):  # term-less by construction
+            return self._similar(pq)
         if not pq.terms:  # defensive: manually built ParsedQuery
             return np.zeros(0, dtype=np.int64)
         if pq.kind == WORD:
@@ -533,6 +562,27 @@ class Session:
         raise ValueError(pq.kind)
 
     # -- host physical operators (the paper's sequential algorithms) ----
+    def _similar(self, pq: ParsedQuery) -> np.ndarray:
+        """``similar:`` / ``versions-of:`` from the persisted signature
+        index (version-structure mining, ``repro.core.similarity``)."""
+        if self.index is None:
+            raise ValueError(f"{unparse(pq)!r} requires the nonpositional "
+                             f"index")
+        sim = getattr(self.index, "similarity", None)
+        if sim is None:
+            raise ValueError(
+                f"cannot answer {unparse(pq)!r}: the served index has no "
+                f"similarity index — build with mine_similarity=True "
+                f"(NonPositionalIndex.build / IndexWriter) so version "
+                f"structure is mined and persisted")
+        if not 0 <= pq.doc < sim.n_docs:
+            raise ValueError(
+                f"doc id {pq.doc} in {unparse(pq)!r} is out of range: the "
+                f"collection has {sim.n_docs} documents (valid ids "
+                f"0..{sim.n_docs - 1}); {GRAMMAR}")
+        return (sim.versions_of(pq.doc) if pq.kind == VERSIONS
+                else sim.similar(pq.doc))
+
     def _word(self, w: str) -> np.ndarray:
         if self.index is None:
             raise ValueError("word queries require the nonpositional index")

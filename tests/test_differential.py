@@ -1,6 +1,6 @@
 """Cross-backend differential fuzz suite.
 
-With 23 registered backends behind one protocol, the main correctness risk
+With 24 registered backends behind one protocol, the main correctness risk
 is *drift*: one backend answering a query differently from the rest.  This
 suite builds randomized versioned collections over a range of mutation
 rates — including the degenerate 0% (all versions identical: maximal
@@ -35,8 +35,8 @@ ALL_BACKENDS = backend_names()
 
 # one backend per family for the cross-family agreement check:
 # run-length (rice_runs), LZ (vbyte_lzend), grammar (repair_skip),
-# self-index (rlcsa)
-FAMILY_REPS = ("rice_runs", "vbyte_lzend", "repair_skip", "rlcsa")
+# self-index (rlcsa), referential (rlz — mined-cluster heads)
+FAMILY_REPS = ("rice_runs", "vbyte_lzend", "repair_skip", "rlcsa", "rlz")
 
 
 # ----------------------------------------------------------------------

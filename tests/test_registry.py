@@ -56,7 +56,8 @@ def brute_phrase(stream, ids):
 # registry metadata + crash paths
 # ----------------------------------------------------------------------
 def test_registry_families_complete():
-    assert len(INVERTED) == 19  # the paper's store zoo
+    assert len(INVERTED) == 20  # the paper's store zoo + the mined rlz
+    assert "rlz" in INVERTED
     assert set(SELFINDEX) >= {"rlcsa", "wcsa", "lz77_idx", "lzend_idx"}
     assert set(ALL_BACKENDS) == set(INVERTED) | set(SELFINDEX)
 

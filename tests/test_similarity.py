@@ -1,0 +1,273 @@
+"""Version-structure mining: MinHash/LSH clustering vs brute-force Jaccard.
+
+The miner's contract is statistical, so every assertion here is stated
+with its error budget: a MinHash estimate over ``num_perm``
+permutations has standard error ``sqrt(J(1-J)/num_perm)`` (≈ 0.0625 at
+J = 0.5 with the default 64 permutations), and the tests allow a
+``MARGIN`` of 0.2 — over 3σ — around the clustering threshold before
+calling a disagreement with the brute-force Jaccard reference a
+failure.  Every failure message carries the ``(structure, seed)`` pair
+(plus the doc ids and both similarity values) so a red run shrinks to a
+one-liner: regenerate the named collection and replay the named query.
+
+Mining never reads ``article_of``; the ground-truth labels appear only
+on the assertion side (purity / pair recall).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.analyzer import Analyzer
+from repro.core.index import NonPositionalIndex
+from repro.core.similarity import (
+    MinHashConfig,
+    SimilarityIndex,
+    est_jaccard,
+    shingle_hashes,
+    signature_matrix,
+)
+from repro.data import generate_collection
+from repro.data.text import tokenize
+from repro.serving.plan import parse_query
+from repro.serving.session import Session
+
+SEED = 7
+CONFIG = MinHashConfig()  # 64 perms x 16 bands, shingle 3, threshold 0.5
+#: slack around the clustering threshold before an estimate/brute
+#: disagreement counts as a failure (> 3 standard errors at J = 0.5)
+MARGIN = 0.2
+
+
+def _term_seqs(docs):
+    """Batch-local analyzed term-id sequences (what the miner consumes)."""
+    an = Analyzer()
+    ids: dict[str, int] = {}
+    seqs = []
+    for doc in docs:
+        seq = [ids.setdefault(w, len(ids))
+               for w in (an.normalize(t) for t in tokenize(doc))
+               if w is not None]
+        seqs.append(np.asarray(seq, dtype=np.int64))
+    return seqs
+
+
+def _brute_jaccard(seqs, k):
+    """Exact pairwise Jaccard over the k-shingle sets — the reference."""
+    sets = [set(shingle_hashes(s, k).tolist()) for s in seqs]
+    n = len(sets)
+    jac = np.zeros((n, n))
+    for i in range(n):
+        for j in range(i + 1, n):
+            union = len(sets[i] | sets[j])
+            jac[i, j] = jac[j, i] = (len(sets[i] & sets[j]) / union
+                                     if union else 0.0)
+    return jac
+
+
+class MinedCase:
+    def __init__(self, structure: str):
+        self.structure = structure
+        self.col = generate_collection(n_articles=5, versions_per_article=8,
+                                       words_per_doc=120, edit_rate=0.02,
+                                       structure=structure, seed=SEED)
+        self.seqs = _term_seqs(self.col.docs)
+        self.sim = SimilarityIndex.mine(self.seqs, CONFIG)
+        self.jac = _brute_jaccard(self.seqs, CONFIG.shingle)
+
+    @property
+    def tag(self) -> str:
+        return f"structure={self.structure!r} seed={SEED}"
+
+
+@pytest.fixture(scope="module", params=["linear", "tree"],
+                ids=lambda s: f"structure={s}")
+def mined(request) -> MinedCase:
+    return MinedCase(request.param)
+
+
+# ----------------------------------------------------------------------
+# acceptance: clusters recover articles without reading the labels
+# ----------------------------------------------------------------------
+def test_purity_recovers_articles(mined):
+    purity = mined.sim.purity(mined.col.article_of)
+    assert purity >= 0.9, (
+        f"mined cluster purity {purity:.3f} < 0.9 at edit_rate=0.02 "
+        f"({mined.tag}): labels={mined.sim.labels.tolist()} "
+        f"truth={mined.col.article_of.tolist()}")
+
+
+def test_pair_recall_against_ground_truth(mined):
+    pairs = mined.col.similar_pairs()
+    assert pairs, f"similar_pairs() empty ({mined.tag})"
+    labels = mined.sim.labels
+    missed = [(i, j) for i, j in pairs if labels[i] != labels[j]]
+    recall = 1 - len(missed) / len(pairs)
+    assert recall >= 0.9, (
+        f"ground-truth pair recall {recall:.3f} < 0.9 ({mined.tag}); "
+        f"first missed pairs {missed[:5]}")
+
+
+def test_stats_exposes_labels(mined):
+    stats = mined.col.stats()
+    assert stats["article_of"] == mined.col.article_of.tolist()
+    assert stats["articles"] == 5 and stats["versions"] == 40
+
+
+# ----------------------------------------------------------------------
+# similar: / versions-of: vs the brute-force Jaccard reference
+# ----------------------------------------------------------------------
+def test_similar_matches_brute_jaccard(mined):
+    """Every pair > MARGIN above the threshold must be returned, nothing
+    > MARGIN below it may be — the band where MinHash noise (stderr
+    sqrt(J(1-J)/num_perm)) can flip the decision is excused."""
+    sim, jac, thr = mined.sim, mined.jac, CONFIG.threshold
+    n = sim.n_docs
+    for d in range(n):
+        got = set(sim.similar(d).tolist())
+        for j in range(n):
+            if j == d:
+                continue
+            if jac[d, j] >= thr + MARGIN:
+                assert j in got, (
+                    f"similar:{d} missed doc {j} with true Jaccard "
+                    f"{jac[d, j]:.3f} >= {thr} + {MARGIN} ({mined.tag}; "
+                    f"estimate {est_jaccard(sim.sigs, d, j):.3f}, "
+                    f"num_perm={CONFIG.num_perm})")
+            if j in got:
+                assert jac[d, j] > thr - MARGIN, (
+                    f"similar:{d} returned doc {j} with true Jaccard "
+                    f"{jac[d, j]:.3f} <= {thr} - {MARGIN} ({mined.tag}; "
+                    f"estimate {est_jaccard(sim.sigs, d, j):.3f}, "
+                    f"num_perm={CONFIG.num_perm})")
+
+
+def test_versions_of_matches_brute_components(mined):
+    """Mined clusters bracket the brute-force transitive closure: pairs
+    connected at threshold + MARGIN must share a cluster, and same-cluster
+    pairs must be connected at threshold - MARGIN."""
+    sim, jac, thr = mined.sim, mined.jac, CONFIG.threshold
+    n = sim.n_docs
+
+    def components(level):
+        parent = list(range(n))
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for i, j in itertools.combinations(range(n), 2):
+            if jac[i, j] >= level:
+                parent[find(i)] = find(j)
+        return [find(i) for i in range(n)]
+
+    tight, loose = components(thr + MARGIN), components(thr - MARGIN)
+    for i, j in itertools.combinations(range(n), 2):
+        same = sim.labels[i] == sim.labels[j]
+        if tight[i] == tight[j]:
+            assert same, (
+                f"docs {i},{j} are brute-connected at Jaccard >= "
+                f"{thr + MARGIN} but mined into different clusters "
+                f"({mined.tag})")
+        if same:
+            assert loose[i] == loose[j], (
+                f"docs {i},{j} share a mined cluster but are not "
+                f"brute-connected even at Jaccard >= {thr - MARGIN} "
+                f"({mined.tag})")
+    # the query surface serves exactly the mined clusters
+    for d in (0, n // 2, n - 1):
+        want = np.flatnonzero(sim.labels == sim.labels[d])
+        assert np.array_equal(sim.versions_of(d), want), (mined.tag, d)
+
+
+def test_session_serves_mined_answers(mined):
+    """similar:/versions-of: through the full parse → plan → execute path
+    return exactly the SimilarityIndex answers."""
+    idx = NonPositionalIndex.build(mined.col.docs, store="vbyte_lzend",
+                                   mine_similarity=True)
+    s = Session(idx)
+    for d in (0, idx.similarity.n_docs - 1):
+        assert np.array_equal(s.execute(f"similar: {d}"),
+                              idx.similarity.similar(d)), (mined.tag, d)
+        assert np.array_equal(s.execute(f"versions-of: {d}"),
+                              idx.similarity.versions_of(d)), (mined.tag, d)
+    plan = s.plan("versions-of: 0")
+    assert plan.route == "host" and plan.strategy == "cluster-versions"
+
+
+# ----------------------------------------------------------------------
+# estimator quality + kernel backend parity
+# ----------------------------------------------------------------------
+def test_minhash_estimates_within_error_bound(mined):
+    """Every estimate sits within 4 standard errors (+1/num_perm
+    quantization) of the true Jaccard."""
+    sim, jac = mined.sim, mined.jac
+    rng = np.random.default_rng(SEED)
+    n = sim.n_docs
+    for _ in range(200):
+        i, j = rng.integers(n), rng.integers(n)
+        if i == j:
+            continue
+        true_j = jac[i, j]
+        est = est_jaccard(sim.sigs, int(i), int(j))
+        bound = 4 * np.sqrt(true_j * (1 - true_j) / CONFIG.num_perm) \
+            + 1 / CONFIG.num_perm
+        assert abs(est - true_j) <= bound, (
+            f"MinHash estimate {est:.3f} off true Jaccard {true_j:.3f} by "
+            f"more than 4 stderr (bound {bound:.3f}, "
+            f"num_perm={CONFIG.num_perm}, docs {i},{j}, {mined.tag})")
+
+
+def test_signature_backends_agree(mined):
+    """ref / jnp / kernel (interpret off-TPU) signature paths are
+    bit-identical — the differential guarantee for the kernel family."""
+    sets = [shingle_hashes(s, CONFIG.shingle) for s in mined.seqs[:12]]
+    ref = signature_matrix(sets, CONFIG, backend="ref")
+    for backend in ("jnp", "kernel"):
+        got = signature_matrix(sets, CONFIG, backend=backend)
+        assert got.dtype == ref.dtype and np.array_equal(got, ref), (
+            f"minhash_sig backend {backend!r} drifts from ref "
+            f"({mined.tag}): first mismatch row "
+            f"{int(np.argmax((got != ref).any(axis=1)))}")
+
+
+# ----------------------------------------------------------------------
+# grammar errors + the referential backend's space win
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("query", ["similar: x", "similar:", "similar: 3 4",
+                                   "versions-of: -1", "versions-of: 1.5"])
+def test_malformed_doc_id_names_grammar(query):
+    with pytest.raises(ValueError, match="non-negative integer doc id"):
+        parse_query(query)
+    with pytest.raises(ValueError, match="grammar"):
+        parse_query(query)
+
+
+def test_out_of_range_doc_id_names_grammar(mined):
+    idx = NonPositionalIndex.build(mined.col.docs[:6], store="vbyte",
+                                   mine_similarity=True)
+    s = Session(idx)
+    with pytest.raises(ValueError, match=r"valid ids 0\.\.5.*grammar"):
+        s.execute("similar: 6")
+
+
+def test_unmined_index_is_refused():
+    idx = NonPositionalIndex.build(["a b c", "a b d"], store="vbyte")
+    with pytest.raises(ValueError, match="mine_similarity=True"):
+        Session(idx).execute("similar: 0")
+
+
+def test_rlz_beats_best_universal_backend():
+    """Acceptance: the structure-mining referential backend out-compresses
+    the best universal one on the standard edit-rate-0.02 fixture."""
+    col = generate_collection(n_articles=5, versions_per_article=20,
+                              words_per_doc=200, edit_rate=0.02, seed=0)
+    rlz = NonPositionalIndex.build(col.docs, store="rlz")
+    lzend = NonPositionalIndex.build(col.docs, store="vbyte_lzend")
+    assert rlz.space_fraction < lzend.space_fraction, (
+        f"rlz space_fraction {rlz.space_fraction:.4f} does not beat "
+        f"vbyte_lzend {lzend.space_fraction:.4f} on the edit-rate-0.02 "
+        f"fixture (seed=0)")
