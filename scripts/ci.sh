@@ -105,6 +105,11 @@ python benchmarks/ingest_throughput.py --store vbyte --commits 4 --batch 60 \
     | python scripts/record_bench.py BENCH_ingest.json
 python benchmarks/ranked_throughput.py --store vbyte --repeats 2 \
     | python scripts/record_bench.py BENCH_serving.json
+# scale smoke: reduced-scale synthetic stream -> mmap open vs eager (the
+# probes differentially spot-check answers) -> q/s during background
+# compaction with byte-identity asserted across the swap
+python benchmarks/scale_open.py --smoke \
+    | python scripts/record_bench.py BENCH_ingest.json
 python benchmarks/compression_ratio.py \
     | python scripts/record_bench.py BENCH_compression.json
 

@@ -12,13 +12,19 @@ under :mod:`repro.core.writer` (segments) and ``Session.open``:
   registry persistence surface (``to_arrays()`` or the generic decoded-
   postings layout — see :func:`repro.core.registry.backend_arrays`).
 
-* :func:`open_index` verifies every checksum, reconstructs the vocabulary,
-  and reloads the backend through its registered restore hook
-  (:func:`repro.core.registry.restore_backend`) — Re-Pair grammars reload
-  their packed rule arrays without recompressing; self-indexes rebuild
-  from the persisted token stream.  The reopened index answers every query
-  kind byte-identically to the index that was saved (asserted per backend
-  in ``tests/test_differential.py``).
+* :func:`open_index` verifies checksums (per the ``verify`` policy),
+  reconstructs the vocabulary, and reloads the backend through its
+  registered restore hook (:func:`repro.core.registry.restore_backend`) —
+  Re-Pair grammars reload their packed rule arrays without recompressing;
+  self-indexes rebuild from the persisted token stream.  The reopened
+  index answers every query kind byte-identically to the index that was
+  saved (asserted per backend in ``tests/test_differential.py``).
+
+* ``open_index(..., mmap=True)`` is the scale path
+  (:mod:`repro.core.storage`): array components open as memory maps, the
+  generic posting layout is served in place, and checksum verification
+  defers to first use — opening a collection larger than RAM is
+  near-instant and resident bytes track the queried working set.
 
 Corruption is a first-class error path: a blob whose checksum no longer
 matches its manifest entry raises :class:`ArtifactError` naming the bad
@@ -36,7 +42,13 @@ import numpy as np
 from ..data.text import Vocabulary
 from .analyzer import Analyzer, get_analyzer
 from .index import NonPositionalIndex, PositionalIndex, ScoringStats
-from .registry import backend_arrays, restore_backend
+from .registry import (
+    FAMILY_INVERTED,
+    backend_arrays,
+    get_backend_spec,
+    restore_backend,
+)
+from .storage import ArtifactError, BlobStore, MappedListStore
 
 FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
@@ -44,9 +56,8 @@ MANIFEST_NAME = "manifest.json"
 KIND_NONPOSITIONAL = "nonpositional"
 KIND_POSITIONAL = "positional"
 
-
-class ArtifactError(RuntimeError):
-    """A persisted index artifact is missing, malformed, or corrupted."""
+__all__ = ["ArtifactError", "save_index", "open_index", "read_manifest",
+           "FORMAT_VERSION", "MANIFEST_NAME"]
 
 
 def _sha256(data: bytes) -> str:
@@ -69,26 +80,6 @@ def _write_component(root: Path, name: str, value) -> dict:
         kind = "array"
     return {"file": fname, "kind": kind, "nbytes": len(payload),
             "sha256": _sha256(payload)}
-
-
-def _read_component(root: Path, name: str, entry: dict):
-    """Load one component blob, verifying its checksum first."""
-    blob_path = root / entry["file"]
-    if not blob_path.is_file():
-        raise ArtifactError(
-            f"artifact at {root} is missing component {name!r} "
-            f"(expected blob {entry['file']})")
-    payload = blob_path.read_bytes()
-    digest = _sha256(payload)
-    if digest != entry["sha256"]:
-        raise ArtifactError(
-            f"checksum mismatch in component {name!r} of artifact {root}: "
-            f"blob {entry['file']} hashes to {digest[:12]}…, manifest "
-            f"records {entry['sha256'][:12]}… — the artifact is corrupted")
-    if entry["kind"] == "bytes":
-        return payload
-    with open(blob_path, "rb") as f:
-        return np.load(f, allow_pickle=False)
 
 
 # ----------------------------------------------------------------------
@@ -180,23 +171,38 @@ def read_manifest(path) -> dict:
     return manifest
 
 
-def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
-    """Reopen a persisted index: verify checksums, rebuild the vocabulary,
-    restore the backend through its registered hook.
+def open_index(path, analyzer=None, *, mmap: bool = False,
+               verify: str | None = None
+               ) -> NonPositionalIndex | PositionalIndex:
+    """Reopen a persisted index: verify checksums per the ``verify``
+    policy, rebuild the vocabulary, restore the backend through its
+    registered hook.
 
     ``analyzer`` asserts the query-time analysis chain: if it differs from
     the chain recorded at build time the open is refused with an
     :class:`ArtifactError` (the index terms would not match the query
-    terms).  Omit it to adopt the recorded chain."""
+    terms).  Omit it to adopt the recorded chain.
+
+    ``mmap=True`` opens array components via ``np.load(mmap_mode="r")``
+    instead of reading them whole; backends without a compiled-state
+    restore hook are then served *in place* through
+    :class:`~repro.core.storage.MappedListStore` — no decode, no rebuild,
+    resident bytes scale with the queried working set.  ``verify``
+    defaults to ``"eager"`` (``"lazy"`` under mmap): with ``"lazy"`` the
+    deferred components are hash-checked before the first posting is
+    served rather than at open (see :class:`~repro.core.storage.BlobStore`).
+    The opened index carries its store as ``index.blobstore`` for
+    resident-bytes accounting."""
     root = Path(path)
     manifest = read_manifest(root)
-    components = manifest["components"]
-    loaded = {name: _read_component(root, name, entry)
-              for name, entry in components.items()}
+    if verify is None:
+        verify = "lazy" if mmap else "eager"
+    blobs = BlobStore(root, manifest["components"], mmap=mmap, verify=verify)
 
-    tokens = json.loads(loaded["vocab"].decode("utf-8"))
+    tokens = json.loads(blobs.get("vocab").decode("utf-8"))
     vocab = Vocabulary(token_to_id={t: i for i, t in enumerate(tokens)},
                        id_to_token=list(tokens))
+    loaded = blobs.get_all()
     doc_starts = loaded.get("doc_starts")
     if doc_starts is not None:
         doc_starts = np.asarray(doc_starts, dtype=np.int64)
@@ -205,7 +211,17 @@ def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
                     if name.startswith("store.")}
     store_name = manifest["store"]
     store_kw = dict(manifest.get("store_kw", {}))
-    store = restore_backend(store_name, store_arrays, **store_kw)
+    spec = get_backend_spec(store_name)
+    if mmap and spec.restore is None and spec.family == FAMILY_INVERTED:
+        # generic persisted layout: serve the mapped arrays in place (the
+        # registered builder would re-encode every list); the first
+        # posting touch settles any deferred checksums
+        store = MappedListStore(store_arrays["postings"],
+                                store_arrays["offsets"],
+                                verify_hook=blobs.verify_pending)
+    else:
+        store = restore_backend(store_name, store_arrays, **store_kw)
+        blobs.verify_pending()  # the restore consumed the arrays: check now
 
     meta = manifest["meta"]
     if manifest["kind"] == KIND_POSITIONAL:
@@ -213,13 +229,15 @@ def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
             raise ArtifactError(
                 f"positional artifact at {root} has no doc_starts component")
         stream = loaded.get("token_stream")
-        return PositionalIndex(
+        idx = PositionalIndex(
             vocab=vocab, store=store, doc_starts=doc_starts,
             n_tokens=int(meta["n_tokens"]),
             collection_bytes=int(meta["collection_bytes"]),
             store_name=store_name,
             token_stream=None if stream is None else np.asarray(stream, dtype=np.int64),
             store_kw=store_kw)
+        idx.blobstore = blobs
+        return idx
     if manifest["kind"] == KIND_NONPOSITIONAL:
         recorded = Analyzer.from_config(meta.get("analyzer"))
         if analyzer is not None:
@@ -247,11 +265,13 @@ def open_index(path, analyzer=None) -> NonPositionalIndex | PositionalIndex:
                  for name, value in loaded.items()
                  if name.startswith("similarity.")},
                 MinHashConfig.from_config(meta.get("similarity")))
-        return NonPositionalIndex(
+        idx = NonPositionalIndex(
             vocab=vocab, store=store, n_docs=int(meta["n_docs"]),
             collection_bytes=int(meta["collection_bytes"]),
             store_name=store_name, doc_starts=doc_starts,
             store_kw=store_kw, analyzer=recorded, scoring=scoring,
             similarity=similarity)
+        idx.blobstore = blobs
+        return idx
     raise ArtifactError(f"artifact at {root} has unknown kind "
                         f"{manifest['kind']!r}")

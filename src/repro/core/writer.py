@@ -15,7 +15,19 @@ per new version is exactly what a universal index must avoid.
   ids remapped in first-occurrence order and posting lists shifted by the
   segment bases, so the compacted index is **identical to a from-scratch
   one-shot build** of the same document sequence (asserted in the
-  differential suite).
+  differential suite);
+* :meth:`IndexWriter.compact_async` runs the same merge on a background
+  thread while the old segments keep serving, then swaps the merged
+  segment in atomically (rename + manifest write under the writer lock)
+  and fires an ``on_swap`` hook exactly once — the serving layer's
+  refresh point.
+
+Every mutation is crash-consistent: segments build inside dot-prefixed
+temp directories (``.tmp-*`` for commits, ``.compact-*`` for
+compactions) and are renamed into place before the atomically-replaced
+``writer.json`` adopts them, so an interruption at any instant leaves
+either the old manifest state or the new — never a half-segment a
+reader could open.  Resume discards orphaned build directories.
 
 A writer directory is a ``writer.json`` manifest (store, build kwargs,
 version counter, per-segment bases) plus ``segments/<name>/`` artifact
@@ -27,6 +39,7 @@ from __future__ import annotations
 
 import json
 import shutil
+import threading
 from dataclasses import asdict, dataclass
 from pathlib import Path
 
@@ -35,6 +48,7 @@ import numpy as np
 from ..data.text import Vocabulary
 from .analyzer import get_analyzer
 from .artifact import ArtifactError, open_index, save_index
+from .storage import CompactionHandle
 from .index import DOC_SEP, NonPositionalIndex, PositionalIndex, ScoringStats
 from .registry import (
     FAMILY_SELFINDEX,
@@ -80,6 +94,8 @@ class IndexWriter:
         self.analyzer = get_analyzer(analyzer)
         self.path = Path(path)
         self._pending: list[str] = []
+        self._lock = threading.RLock()  # segment list + manifest mutations
+        self._compaction: CompactionHandle | None = None
         manifest_path = self.path / WRITER_MANIFEST
         if manifest_path.is_file():
             m = json.loads(manifest_path.read_text())
@@ -119,6 +135,10 @@ class IndexWriter:
             self.cluster_placement = bool(m.get("cluster_placement", False))
             self.version = int(m["version"])
             self.segments = [SegmentMeta(**s) for s in m["segments"]]
+            # an interrupted commit/compaction leaves build dirs the
+            # manifest never adopted — resume discards them so no
+            # half-segment is ever served and no name can collide
+            self._clean_orphans()
         else:
             self.path.mkdir(parents=True, exist_ok=True)
             self.store = store
@@ -159,6 +179,30 @@ class IndexWriter:
     def segment_dir(self, seg: SegmentMeta) -> Path:
         return self.path / "segments" / seg.name
 
+    @property
+    def compacting(self) -> bool:
+        """True while a background compaction is in flight."""
+        handle = self._compaction
+        return handle is not None and not handle.done
+
+    def _require_quiesced_writer(self, what: str) -> None:
+        if self.compacting:
+            raise RuntimeError(
+                f"cannot {what} while a background compaction is in "
+                f"flight — wait() on the compact_async handle first")
+
+    def _clean_orphans(self) -> None:
+        """Remove segment directories the manifest does not reference:
+        interrupted-commit ``.tmp-*`` builds, interrupted-compaction
+        ``.compact-*`` builds, and renamed-but-never-adopted dirs."""
+        seg_root = self.path / "segments"
+        if not seg_root.is_dir():
+            return
+        live = {s.name for s in self.segments}
+        for child in seg_root.iterdir():
+            if child.is_dir() and child.name not in live:
+                shutil.rmtree(child, ignore_errors=True)
+
     def _write_manifest(self) -> None:
         manifest = {
             "format_version": WRITER_FORMAT_VERSION,
@@ -192,7 +236,14 @@ class IndexWriter:
         Cost is proportional to the committed batch: the existing segments
         are never touched, so appending a new version of a document is a
         small commit regardless of collection size.
+
+        Crash-consistent: the segment is built inside a ``.tmp-*``
+        directory and atomically renamed into place before the manifest
+        adopts it — an interrupted commit leaves no half-segment the
+        manifest could ever reference (resume discards the orphaned build
+        directory).
         """
+        self._require_quiesced_writer("commit")
         if not self._pending:
             raise ValueError("nothing to commit: add_documents first")
         docs, self._pending = self._pending, []
@@ -204,35 +255,101 @@ class IndexWriter:
             docs = [docs[int(i)] for i in order]
         name = f"seg-{self.version:06d}"
         seg_dir = self.path / "segments" / name
-        idx = NonPositionalIndex.build(docs, store=self.store,
-                                       analyzer=self.analyzer,
-                                       mine_similarity=self.mine_similarity,
-                                       **self.store_kw)
-        save_index(idx, seg_dir / "nonpositional")
-        n_tokens = 0
-        if self.positional:
-            pidx = PositionalIndex.build(docs, store=self.store,
-                                         keep_text=self.keep_text, **self.store_kw)
-            save_index(pidx, seg_dir / "positional")
-            n_tokens = int(pidx.n_tokens)
-        meta = SegmentMeta(name=name, n_docs=len(docs), doc_base=self.n_docs,
-                           n_tokens=n_tokens, token_base=self.n_tokens,
-                           collection_bytes=sum(len(d) for d in docs))
-        self.segments.append(meta)
-        self.version += 1
-        self._write_manifest()
+        tmp_dir = self.path / "segments" / f".tmp-{name}"
+        if tmp_dir.exists():
+            shutil.rmtree(tmp_dir)
+        try:
+            idx = NonPositionalIndex.build(docs, store=self.store,
+                                           analyzer=self.analyzer,
+                                           mine_similarity=self.mine_similarity,
+                                           **self.store_kw)
+            save_index(idx, tmp_dir / "nonpositional")
+            n_tokens = 0
+            if self.positional:
+                pidx = PositionalIndex.build(docs, store=self.store,
+                                             keep_text=self.keep_text,
+                                             **self.store_kw)
+                save_index(pidx, tmp_dir / "positional")
+                n_tokens = int(pidx.n_tokens)
+        except BaseException:
+            # best-effort cleanup; a hard crash leaves the .tmp dir for
+            # resume to discard — the manifest never saw it either way
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            raise
+        with self._lock:
+            meta = SegmentMeta(name=name, n_docs=len(docs),
+                               doc_base=self.n_docs, n_tokens=n_tokens,
+                               token_base=self.n_tokens,
+                               collection_bytes=sum(len(d) for d in docs))
+            tmp_dir.rename(seg_dir)
+            self.segments.append(meta)
+            self.version += 1
+            self._write_manifest()
         return meta
 
     # ------------------------------------------------------------------
     # compaction
     # ------------------------------------------------------------------
-    def open_segment(self, seg: SegmentMeta):
-        """(nonpositional, positional | None) indexes of one segment."""
+    def open_segment(self, seg: SegmentMeta, *, mmap: bool = False,
+                     verify: str | None = None):
+        """(nonpositional, positional | None) indexes of one segment.
+
+        ``mmap`` / ``verify`` forward to :func:`repro.core.artifact.open_index`
+        — ``Session.open(..., mmap=True)`` threads them through here so a
+        multi-segment open stays near-instant."""
         seg_dir = self.segment_dir(seg)
-        np_idx = open_index(seg_dir / "nonpositional")
-        pos_idx = (open_index(seg_dir / "positional")
+        np_idx = open_index(seg_dir / "nonpositional", mmap=mmap, verify=verify)
+        pos_idx = (open_index(seg_dir / "positional", mmap=mmap, verify=verify)
                    if self.positional else None)
         return np_idx, pos_idx
+
+    def _merged_indexes(self, segments: list[SegmentMeta]):
+        """Merge the given segments into (nonpositional, positional | None)
+        in-memory indexes — the read-only half of a compaction, safe to run
+        off-thread while the segments keep serving."""
+        opened = [self.open_segment(s) for s in segments]
+        merged_np = _merge_nonpositional([o[0] for o in opened], self.store,
+                                         self.store_kw, analyzer=self.analyzer)
+        merged_pos = None
+        if self.positional:
+            merged_pos = _merge_positional([o[1] for o in opened], self.store,
+                                           self.store_kw, self.keep_text)
+        return merged_np, merged_pos
+
+    def _write_merged(self, merged_np, merged_pos, name: str) -> Path:
+        """Persist the merged indexes into a ``.compact-*`` build directory
+        the manifest does not reference yet; returns that directory."""
+        tmp_dir = self.path / "segments" / f".compact-{name}"
+        if tmp_dir.exists():
+            shutil.rmtree(tmp_dir)
+        save_index(merged_np, tmp_dir / "nonpositional")
+        if merged_pos is not None:
+            save_index(merged_pos, tmp_dir / "positional")
+        return tmp_dir
+
+    def _swap_merged(self, old: list[SegmentMeta], name: str, tmp_dir: Path,
+                     merged_np, merged_pos, on_swap=None) -> SegmentMeta:
+        """Atomically adopt the merged segment: rename the build directory
+        into place, replace the segment list, persist the manifest, then
+        fire ``on_swap`` (the serving layer's refresh hook) and only then
+        delete the old segment directories — in-flight readers holding the
+        old segments keep their mappings (the inodes outlive the unlink)."""
+        with self._lock:
+            tmp_dir.rename(self.path / "segments" / name)
+            self.segments = [SegmentMeta(
+                name=name, n_docs=int(merged_np.n_docs), doc_base=0,
+                n_tokens=0 if merged_pos is None else int(merged_pos.n_tokens),
+                token_base=0,
+                collection_bytes=int(merged_np.collection_bytes))]
+            self.version += 1
+            self._write_manifest()
+            meta = self.segments[0]
+        if on_swap is not None:
+            on_swap()
+        for seg in old:
+            shutil.rmtree(self.path / "segments" / seg.name,
+                          ignore_errors=True)
+        return meta
 
     def compact(self) -> SegmentMeta:
         """Merge every live segment into one.
@@ -242,31 +359,55 @@ class IndexWriter:
         the same document sequence; the merged store is rebuilt once from
         the merged lists/stream through the registered builder.
         """
+        self._require_quiesced_writer("compact")
         if not self.segments:
             raise ValueError("nothing to compact: no segments committed")
-        opened = [self.open_segment(s) for s in self.segments]
-        merged_np = _merge_nonpositional([o[0] for o in opened], self.store,
-                                         self.store_kw, analyzer=self.analyzer)
-        merged_pos = None
-        if self.positional:
-            merged_pos = _merge_positional([o[1] for o in opened], self.store,
-                                           self.store_kw, self.keep_text)
-        name = f"seg-{self.version:06d}"
-        seg_dir = self.path / "segments" / name
-        save_index(merged_np, seg_dir / "nonpositional")
-        if merged_pos is not None:
-            save_index(merged_pos, seg_dir / "positional")
         old = list(self.segments)
-        self.segments = [SegmentMeta(
-            name=name, n_docs=int(merged_np.n_docs), doc_base=0,
-            n_tokens=0 if merged_pos is None else int(merged_pos.n_tokens),
-            token_base=0,
-            collection_bytes=int(merged_np.collection_bytes))]
-        self.version += 1
-        self._write_manifest()
-        for seg in old:
-            shutil.rmtree(self.segment_dir(seg), ignore_errors=True)
-        return self.segments[0]
+        name = f"seg-{self.version:06d}"
+        merged_np, merged_pos = self._merged_indexes(old)
+        tmp_dir = self._write_merged(merged_np, merged_pos, name)
+        return self._swap_merged(old, name, tmp_dir, merged_np, merged_pos)
+
+    def compact_async(self, on_swap=None) -> CompactionHandle:
+        """Start :meth:`compact` on a background thread and return a
+        :class:`~repro.core.storage.CompactionHandle`.
+
+        The merge + write run against a snapshot of the current segment
+        set while those segments keep serving; the swap is the same
+        atomic rename + manifest write as the synchronous path, taken
+        under the writer lock.  ``on_swap`` fires exactly once, after the
+        manifest adopts the merged segment and before the old directories
+        are deleted — ``Session.refresh`` / frontend drain hooks go here
+        so new queries see the merged segment while in-flight ones finish
+        on the old mappings.
+
+        One compaction at a time: ``commit`` / ``compact`` /
+        ``compact_async`` raise while a handle is in flight.  On worker
+        failure the ``.compact-*`` build directory is removed and the
+        pre-compaction segment set is untouched.
+        """
+        self._require_quiesced_writer("start another compaction")
+        if not self.segments:
+            raise ValueError("nothing to compact: no segments committed")
+        with self._lock:
+            old = list(self.segments)
+            name = f"seg-{self.version:06d}"
+
+        def _work() -> SegmentMeta:
+            tmp_dir = None
+            try:
+                merged_np, merged_pos = self._merged_indexes(old)
+                tmp_dir = self._write_merged(merged_np, merged_pos, name)
+                return self._swap_merged(old, name, tmp_dir, merged_np,
+                                         merged_pos, on_swap=on_swap)
+            except BaseException:
+                if tmp_dir is not None:
+                    shutil.rmtree(tmp_dir, ignore_errors=True)
+                raise
+
+        handle = CompactionHandle(_work, name=f"compact-{name}")
+        self._compaction = handle
+        return handle.start()
 
 
 # ----------------------------------------------------------------------

@@ -1,5 +1,6 @@
 from .text import Vocabulary, tokenize, detokenize, STOPWORDS
 from .collection import VersionedCollection, generate_collection
+from .synthetic import SyntheticSpec, ingest_stream, stream_collection
 
 __all__ = [
     "Vocabulary",
@@ -8,4 +9,7 @@ __all__ = [
     "STOPWORDS",
     "VersionedCollection",
     "generate_collection",
+    "SyntheticSpec",
+    "ingest_stream",
+    "stream_collection",
 ]

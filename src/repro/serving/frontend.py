@@ -559,6 +559,21 @@ class MicroBatchFrontend:
         loop = asyncio.get_running_loop()
         return await loop.run_in_executor(self._executor, self.session.refresh)
 
+    def refresh_threadsafe(self, timeout: float | None = 60.0) -> int:
+        """:meth:`refresh` callable from a non-loop thread — the shape
+        ``IndexWriter.compact_async(on_swap=...)`` needs: the compaction
+        worker blocks here while the frontend drains its in-flight
+        micro-batches, swaps the session onto the merged segment and
+        invalidates the result cache, and only then returns to let the
+        worker delete the old segment directories.  Falls back to an
+        inline ``Session.refresh`` when no event loop has admitted
+        traffic yet."""
+        loop = self._loop
+        if loop is None or not loop.is_running():
+            return self.session.refresh()
+        fut = asyncio.run_coroutine_threadsafe(self.refresh(), loop)
+        return fut.result(timeout)
+
     async def close(self) -> None:
         """Drain outstanding work, then stop admitting queries."""
         if self._closed:

@@ -111,6 +111,7 @@ class Session:
         self._segments: list[_Segment] = []
         self._source_path: Path | None = None
         self._open_kw: dict = {}
+        self._storage_kw: dict = {}
         self._refresh_hooks: list = []
         self.data_version = 0
         self.frontend = None  # attached MicroBatchFrontend (metrics surface)
@@ -158,7 +159,8 @@ class Session:
     # -- persisted artifacts / segmented collections --------------------
     @classmethod
     def open(cls, path, device: bool = True, probe: str = "vmap",
-             expand_len: int = 32, layout: str = "auto") -> "Session":
+             expand_len: int = 32, layout: str = "auto",
+             mmap: bool = False, verify: str | None = None) -> "Session":
         """Serve a persisted index instead of rebuilding.
 
         ``path`` is either one artifact directory (``manifest.json``), a
@@ -166,29 +168,41 @@ class Session:
         subdirectories), or an :class:`~repro.core.writer.IndexWriter`
         directory — the latter opens segment-aware: one child session per
         segment, answers merged on the manifest's doc/token offsets.
+
+        ``mmap=True`` is the scale path: array blobs open as memory maps
+        and eligible backends serve the persisted layout in place (see
+        :func:`repro.core.artifact.open_index`), so opening a collection
+        larger than RAM is near-instant and resident bytes track the
+        queried working set.  ``verify`` sets the checksum policy
+        (``"eager"`` / ``"lazy"`` / ``"off"``; default eager, lazy under
+        mmap).  Both persist across :meth:`refresh` — segments opened
+        later inherit the same storage policy.
         """
         p = Path(path)
         open_kw = dict(device=device, probe=probe, expand_len=expand_len,
                        layout=layout)
+        storage_kw = dict(mmap=mmap, verify=verify)
         if is_writer_dir(p):
             sess = cls()
             sess._source_path = p
             sess._open_kw = open_kw
+            sess._storage_kw = storage_kw
             if sess.refresh() == 0:
                 raise ArtifactError(
                     f"writer at {p} has no committed segments — "
                     f"add_documents + commit before serving it")
             return sess
         if (p / MANIFEST_NAME).is_file():
-            ix = open_index(p)
+            ix = open_index(p, **storage_kw)
             if isinstance(ix, PositionalIndex):
                 return cls.build(None, positional=ix, **open_kw)
             return cls.build(ix, **open_kw)
         npdir, posdir = p / "nonpositional", p / "positional"
         if npdir.is_dir() or posdir.is_dir():
             return cls.build(
-                open_index(npdir) if npdir.is_dir() else None,
-                positional=open_index(posdir) if posdir.is_dir() else None,
+                open_index(npdir, **storage_kw) if npdir.is_dir() else None,
+                positional=(open_index(posdir, **storage_kw)
+                            if posdir.is_dir() else None),
                 **open_kw)
         raise ArtifactError(
             f"nothing to open at {p}: expected an index artifact "
@@ -198,7 +212,12 @@ class Session:
         """Re-read the writer manifest and open segments committed since
         (a compaction replaces the whole set).  Returns the number of
         newly opened segments; open sessions for untouched segments — and
-        their plan caches / traced device steps — are reused."""
+        their plan caches / traced device steps — are reused.
+
+        The visible segment list is replaced atomically (never mutated in
+        place), so an :meth:`execute` racing a refresh from another thread
+        answers against exactly one snapshot — pre- or post-refresh,
+        never a mix (asserted in ``tests/test_storage.py``)."""
         if self._source_path is None:
             raise ValueError("refresh() requires a session opened from a "
                              "writer directory (Session.open)")
@@ -215,7 +234,8 @@ class Session:
         for meta in writer.segments:
             seg = current.get(meta.name)
             if seg is None:
-                np_idx, pos_idx = writer.open_segment(meta)
+                np_idx, pos_idx = writer.open_segment(meta,
+                                                      **self._storage_kw)
                 seg = _Segment(
                     session=Session.build(np_idx, positional=pos_idx,
                                           **self._open_kw),
@@ -397,11 +417,15 @@ class Session:
         single = isinstance(queries, (str, ParsedQuery))
         batch = [queries] if single else list(queries)
         parsed = [self._parse(q) for q in batch]
-        if self._segments:
+        # snapshot: refresh() replaces (never mutates) the segment list, so
+        # one execute answers against exactly one committed segment set
+        # even when another thread refreshes mid-query
+        segs = self._segments
+        if segs:
             for pq in parsed:
                 self.plan(pq)  # warm/count the segment-shape route cache
             self.queries_executed += len(batch)
-            out = self._execute_segmented(parsed)
+            out = self._execute_segmented(parsed, segs)
             return out[0] if single else out
         routes = [self.plan(pq) for pq in parsed]
         self.queries_executed += len(batch)
@@ -435,7 +459,8 @@ class Session:
     # token_base; a document lives in exactly one segment, so per-doc
     # scores are complete within their segment and per-segment top-k
     # followed by a global re-rank is exact) ----------------------------
-    def _execute_segmented(self, parsed: list[ParsedQuery]) -> list[np.ndarray]:
+    def _execute_segmented(self, parsed: list[ParsedQuery],
+                           segs: list[_Segment]) -> list[np.ndarray]:
         scored_idx = [i for i, pq in enumerate(parsed)
                       if pq.kind == DOCS_TOPK]
         rank_idx = [i for i, pq in enumerate(parsed) if pq.kind == RANK]
@@ -449,11 +474,11 @@ class Session:
             # version mining is segment-local: the subject doc's segment
             # answers with local ids, shifted back to global (compaction
             # re-links clusters across former segment boundaries)
-            per_seg[i].append(self._similar_segmented(parsed[i]))
+            per_seg[i].append(self._similar_segmented(parsed[i], segs))
         gstats = (self._global_rank_stats(
-            {t for i in rank_idx for t in parsed[i].terms})
+            {t for i in rank_idx for t in parsed[i].terms}, segs)
             if rank_idx else None)
-        for seg in self._segments:
+        for seg in segs:
             child = seg.session
             if plain_idx:
                 child_out = child.execute([parsed[i] for i in plain_idx])
@@ -497,12 +522,13 @@ class Session:
             out.append(merged)
         return out
 
-    def _similar_segmented(self, pq: ParsedQuery) -> np.ndarray:
+    def _similar_segmented(self, pq: ParsedQuery,
+                           segs: list[_Segment]) -> np.ndarray:
         """Dispatch ``similar:``/``versions-of:`` to the segment owning the
         subject doc id (documents live in exactly one segment)."""
-        total = sum(s.session.index.n_docs for s in self._segments
+        total = sum(s.session.index.n_docs for s in segs
                     if s.session.index is not None)
-        for seg in self._segments:
+        for seg in segs:
             ix = seg.session.index
             if ix is None:
                 continue
@@ -702,11 +728,11 @@ class Session:
         top = rank_docs(cands, cscores, k)
         return top, cscores[np.searchsorted(cands, top)]
 
-    def _global_rank_stats(self, terms) -> dict:
+    def _global_rank_stats(self, terms, segs: list[_Segment]) -> dict:
         """Collection-wide BM25 statistics across all segments — every
         segment scores with the same ``n_docs`` / ``avgdl`` / per-term
         ``df``, so per-segment top-k lists merge exactly."""
-        children = [seg.session.index for seg in self._segments]
+        children = [seg.session.index for seg in segs]
         n_docs = sum(ix.n_docs for ix in children)
         total_terms = sum(ix.scoring.total_terms for ix in children
                           if ix is not None and ix.scoring is not None)
@@ -775,9 +801,10 @@ class Session:
         pq = parse_query(q)
         if pq.kind not in (WORD, PHRASE):
             raise ValueError(f"extract serves word/phrase queries, not {pq.kind}")
-        if self._segments:
+        segs = self._segments  # snapshot (see execute)
+        if segs:
             out: list[np.ndarray] = []
-            for seg in self._segments:  # occurrences in global order
+            for seg in segs:  # occurrences in global order
                 out.extend(seg.session.extract(pq, context=context))
             return out
         if self.positional is None:

@@ -320,6 +320,63 @@ def test_latency_metrics_through_session(vbyte_case, collection):
     assert "queue_depth_max" in m["frontend"]["latency"]
 
 
+def test_refresh_threadsafe_without_loop_falls_back_inline(tmp_path):
+    """Before any traffic has touched the event loop, the compaction
+    on_swap hook must still work: refresh_threadsafe degrades to an
+    inline Session.refresh."""
+    from repro.core.writer import IndexWriter
+
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=True)
+    w.add_documents(["alpha beta gamma", "beta delta alpha"])
+    w.commit()
+    session = Session.open(w.path, device=False)
+    fe = MicroBatchFrontend(session, FrontendConfig())
+    handle = w.compact_async(on_swap=fe.refresh_threadsafe)
+    handle.wait(60)
+    assert len(session._segments) == 1
+    assert np.array_equal(np.asarray(session.execute("docs: alpha")),
+                          np.asarray([0, 1]))
+
+
+def test_mid_flight_refresh_never_caches_across_shapes(tmp_path):
+    """A batch whose execution straddles a refresh must not deposit its
+    answers under the new segment shape (the p.key guard): afterwards the
+    cache serves only answers computed against the live shape."""
+    from repro.core.writer import IndexWriter
+
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=True)
+    w.add_documents(["alpha beta gamma", "beta delta alpha"])
+    w.commit()
+    session = Session.open(w.path, device=False)
+    orig_execute = session.execute
+    w.add_documents(["alpha zebra quartz"])
+    w.commit()
+
+    def refresh_mid_batch(queries):
+        out = orig_execute(queries)
+        session.refresh()  # the shape moves while the batch is in flight
+        return out
+
+    session.execute = refresh_mid_batch
+
+    async def main():
+        fe = MicroBatchFrontend(session,
+                                FrontendConfig(max_batch=4, max_delay=0.001))
+        stale = np.asarray(await fe.submit("docs: alpha"))
+        session.execute = orig_execute
+        fresh = np.asarray(await fe.submit("docs: alpha"))
+        metrics = fe.cache.metrics()
+        await fe.close()
+        return stale, fresh, metrics
+
+    stale, fresh, metrics = asyncio.run(main())
+    assert np.array_equal(stale, np.asarray([0, 1]))  # pre-refresh snapshot
+    assert np.array_equal(fresh, np.asarray([0, 1, 2]))  # live shape
+    # the straddling answer was served but never cached: the second submit
+    # was a miss, not a stale hit
+    assert metrics["hits"] == 0, metrics
+
+
 def test_open_loop_overload_rejects_not_hangs(vbyte_case, collection):
     """At an absurd offered load over a tiny queue the driver must come
     back with rejections recorded, not deadlock."""

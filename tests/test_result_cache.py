@@ -269,3 +269,61 @@ def test_cached_arrays_are_frozen(tmp_path):
     assert results[1].flags.writeable is False
     with pytest.raises(ValueError):
         results[1][0] = 999  # a caller cannot corrupt the shared entry
+
+
+def test_background_compaction_swap_under_live_traffic(tmp_path):
+    """The headline storage-layer regression: ``compact_async`` swapping
+    the segment set behind a frontend under continuous traffic serves
+    **zero stale entries** (compaction preserves answers, so every answer
+    — during the merge, across the swap, after it — must equal the cold
+    reference) and **never drops an in-flight query**; the result cache
+    is invalidated exactly once, at the swap."""
+    import time as _time
+
+    w = make_writer(tmp_path)
+    w.add_documents(DOCS_V2)
+    w.commit()
+    session = Session.open(w.path, device=False)
+    queries = ["docs: alpha", "docs: zebra", "alpha beta",
+               '"zebra quartz"', "top3: alpha gamma"]
+    reference = [np.asarray(r) for r in cold_answers(w.path, queries)]
+
+    # slow the merge down so several traffic rounds overlap it
+    orig_merge = w._merged_indexes
+
+    def slow_merge(segments):
+        _time.sleep(0.15)
+        return orig_merge(segments)
+
+    w._merged_indexes = slow_merge
+
+    async def main():
+        fe = MicroBatchFrontend(session,
+                                FrontendConfig(max_batch=4, max_delay=0.001))
+        for q in queries:
+            await fe.submit(q)  # warm the cache: the swap must clear these
+        version_before = session.data_version
+        handle = w.compact_async(on_swap=fe.refresh_threadsafe)
+        served = []
+        while not handle.done:
+            # gather raises if any in-flight query is dropped or errored
+            results = await asyncio.gather(*(fe.submit(q) for q in queries))
+            served.append([np.asarray(r) for r in results])
+        served.append([np.asarray(await fe.submit(q)) for q in queries])
+        metrics = fe.cache.metrics()
+        swaps = session.data_version - version_before
+        await fe.close()
+        return handle, served, metrics, swaps
+
+    handle, served, metrics, swaps = asyncio.run(main())
+    handle.wait(60)
+    assert len(served) >= 2  # traffic genuinely overlapped the merge
+    assert swaps == 1  # the cache invalidation fired exactly once
+    assert metrics["invalidated"] >= len(queries), metrics
+    assert len(session._segments) == 1  # the swap reached the session
+    for round_i, results in enumerate(served):
+        assert len(results) == len(queries)  # nothing dropped
+        for q, res, ref in zip(queries, results, reference):
+            assert np.array_equal(res, ref), \
+                (f"(seed={BASE_SEED}, round={round_i}, query={q!r}): stale "
+                 f"serve across the compaction swap: {res} != {ref}")

@@ -1,0 +1,389 @@
+"""Storage-layer lockdown: mmap artifacts, verify policies, background
+compaction, crash consistency, refresh/execute races.
+
+The contracts under test:
+
+* ``open_index(..., mmap=True)`` serves the persisted layout in place
+  (:class:`~repro.core.storage.MappedListStore` for hook-less inverted
+  backends) with answers **byte-identical** to the eager open, while
+  materializing only a small fraction of the artifact;
+* checksum policies — ``eager`` fails at open, ``lazy`` fails before the
+  first posting is served (never after an answer), ``off`` never checks;
+* ``IndexWriter.compact_async`` merges on a worker thread while the old
+  segments keep serving, swaps atomically, fires ``on_swap`` exactly
+  once, and mutating the writer mid-flight is a typed error;
+* an interrupted commit leaves **no half-segment**: the manifest never
+  references the dead build directory and resume discards it;
+* ``Session.refresh()`` racing ``execute()`` from another thread always
+  answers against exactly one committed snapshot — pre- or post-refresh,
+  never a mix.
+"""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import ArtifactError, open_index, save_index
+from repro.core.index import NonPositionalIndex
+from repro.core.storage import BlobStore, CompactionHandle, MappedListStore
+from repro.core.storage.compaction import CompactionError
+from repro.core.writer import IndexWriter
+from repro.serving.session import Session
+
+BASE_SEED = int(os.environ.get("REPRO_DIFF_SEED", "20260727"))
+
+DOCS_V1 = [
+    "alpha beta gamma alpha beta",
+    "alpha gamma delta epsilon gamma",
+    "zebra quartz zebra nickel quartz",
+    "beta delta nickel epsilon beta",
+]
+DOCS_V2 = [
+    "alpha beta alpha gamma beta",
+    "delta alpha epsilon beta gamma",
+]
+
+QUERIES = ["alpha", "alpha beta", "docs: gamma", "top3: alpha beta",
+           "docs-top3: beta", "rank3: alpha delta", "docs: zebra"]
+
+
+def make_writer(tmp_path, store="vbyte", positional=True, both=True):
+    w = IndexWriter(tmp_path / "col", store=store, positional=positional)
+    w.add_documents(DOCS_V1)
+    w.commit()
+    if both:
+        w.add_documents(DOCS_V2)
+        w.commit()
+    return w
+
+
+def corrupt_component(artifact_dir, name):
+    """Flip bytes in one component blob without touching the manifest."""
+    manifest = json.loads((artifact_dir / "manifest.json").read_text())
+    blob = artifact_dir / manifest["components"][name]["file"]
+    data = bytearray(blob.read_bytes())
+    data[-1] ^= 0xFF
+    blob.write_bytes(bytes(data))
+
+
+# ----------------------------------------------------------------------
+# mmap open: identity, residency, store selection
+# ----------------------------------------------------------------------
+def test_mmap_open_serves_mapped_store_byte_identical(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1 + DOCS_V2, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    eager = open_index(root)
+    mapped = open_index(root, mmap=True)
+    assert isinstance(mapped.store, MappedListStore)
+    assert not isinstance(eager.store, MappedListStore)
+    for tid in range(len(idx.vocab)):
+        assert np.array_equal(np.asarray(eager.store.get_list(tid)),
+                              np.asarray(mapped.store.get_list(tid))), \
+            f"(seed={BASE_SEED}, tid={tid}): mapped list diverges"
+        assert eager.store.list_length(tid) == mapped.store.list_length(tid)
+    assert mapped.store.n_lists == eager.store.n_lists
+
+
+def test_mmap_session_answers_equal_eager(tmp_path):
+    w = make_writer(tmp_path)
+    eager = Session.open(w.path, device=False)
+    mapped = Session.open(w.path, device=False, mmap=True)
+    for q in QUERIES:
+        assert np.array_equal(np.asarray(eager.execute(q)),
+                              np.asarray(mapped.execute(q))), \
+            f"(seed={BASE_SEED}, query={q!r}): mmap != eager"
+
+
+def test_mmap_open_materializes_small_fraction(tmp_path):
+    w = make_writer(tmp_path, positional=False)
+    sess = Session.open(w.path, device=False, mmap=True)
+    stores = [seg.session.index.blobstore for seg in sess._segments]
+    assert stores and all(b.mmap for b in stores)
+    frac = (sum(b.loaded_nbytes for b in stores)
+            / sum(b.total_nbytes for b in stores))
+    # only the vocab (bytes component) is materialized at open
+    assert frac < 0.5, frac
+    loaded_before = sum(b.loaded_nbytes for b in stores)
+    sess.execute("alpha beta")  # paging, not loading: accounting unchanged
+    assert sum(b.loaded_nbytes for b in stores) == loaded_before
+
+
+def test_mmap_with_restore_hook_backend_still_works(tmp_path):
+    """Backends with a compiled-state restore hook (repair_skip) adopt
+    their packed arrays under mmap too — no MappedListStore, same
+    answers."""
+    w = make_writer(tmp_path, store="repair_skip")
+    eager = Session.open(w.path, device=False)
+    mapped = Session.open(w.path, device=False, mmap=True)
+    seg_store = mapped._segments[0].session.index.store
+    assert not isinstance(seg_store, MappedListStore)
+    for q in QUERIES:
+        assert np.array_equal(np.asarray(eager.execute(q)),
+                              np.asarray(mapped.execute(q))), \
+            f"(seed={BASE_SEED}, store=repair_skip, query={q!r})"
+
+
+# ----------------------------------------------------------------------
+# verify policies
+# ----------------------------------------------------------------------
+def test_verify_eager_fails_at_open(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    corrupt_component(root, "store.postings")
+    with pytest.raises(ArtifactError, match="checksum mismatch.*store.postings"):
+        open_index(root)  # default: eager
+
+
+def test_verify_lazy_fails_before_first_answer(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    corrupt_component(root, "store.postings")
+    mapped = open_index(root, mmap=True)  # lazy: open succeeds
+    assert "store.postings" in mapped.blobstore.pending_verification
+    with pytest.raises(ArtifactError, match="checksum mismatch.*store.postings"):
+        mapped.store.get_list(0)  # first touch settles the pending set
+
+
+def test_verify_lazy_settles_on_first_touch(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    mapped = open_index(root, mmap=True, verify="lazy")
+    assert mapped.blobstore.pending_verification  # deferred at open
+    mapped.store.get_list(0)
+    assert not mapped.blobstore.pending_verification  # settled, once
+    mapped.store.get_list(1)  # idempotent: no re-hash path to fail
+
+
+def test_verify_off_never_checks(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    corrupt_component(root, "scoring.doc_lengths")
+    opened = open_index(root, verify="off")  # corrupted yet silent, by request
+    opened.store.get_list(0)
+
+
+def test_verify_mode_validated(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    with pytest.raises(ValueError, match="unknown verify mode"):
+        open_index(root, verify="sometimes")
+
+
+def test_blobstore_accounting(tmp_path):
+    idx = NonPositionalIndex.build(DOCS_V1, store="vbyte")
+    root = save_index(idx, tmp_path / "art")
+    manifest = json.loads((root / "manifest.json").read_text())
+    blobs = BlobStore(root, manifest["components"], mmap=False)
+    assert blobs.loaded_nbytes == 0 and blobs.loaded_fraction == 0.0
+    blobs.get_all()
+    assert blobs.loaded_nbytes > 0
+    assert blobs.total_nbytes == sum(int(e["nbytes"])
+                                     for e in manifest["components"].values())
+
+
+# ----------------------------------------------------------------------
+# background compaction
+# ----------------------------------------------------------------------
+def test_compact_async_equals_sync_compact(tmp_path):
+    wa = make_writer(tmp_path / "a")
+    wb = make_writer(tmp_path / "b")
+    wa.compact()
+    handle = wb.compact_async()
+    meta = handle.wait(60)
+    assert meta.n_docs == wa.segments[0].n_docs == len(DOCS_V1 + DOCS_V2)
+    sa = Session.open(wa.path, device=False)
+    sb = Session.open(wb.path, device=False)
+    for q in QUERIES:
+        assert np.array_equal(np.asarray(sa.execute(q)),
+                              np.asarray(sb.execute(q))), \
+            f"(seed={BASE_SEED}, query={q!r}): async compact diverged"
+
+
+def test_serving_continues_during_compaction(tmp_path):
+    """Queries served while the merge runs are byte-identical to the
+    quiesced answers, before and after the swap."""
+    w = make_writer(tmp_path)
+    sess = Session.open(w.path, device=False, mmap=True)
+    expected = [np.asarray(sess.execute(q)) for q in QUERIES]
+    handle = w.compact_async(on_swap=sess.refresh)
+    rounds = 0
+    while not handle.done:
+        for q, exp in zip(QUERIES, expected):
+            assert np.array_equal(np.asarray(sess.execute(q)), exp), \
+                f"(seed={BASE_SEED}, query={q!r}): drift during compaction"
+        rounds += 1
+    handle.wait(60)
+    assert len(sess._segments) == 1  # on_swap refreshed the session
+    for q, exp in zip(QUERIES, expected):
+        assert np.array_equal(np.asarray(sess.execute(q)), exp), \
+            f"(seed={BASE_SEED}, query={q!r}): drift after swap"
+
+
+def test_on_swap_fires_exactly_once(tmp_path):
+    w = make_writer(tmp_path)
+    fired = []
+    handle = w.compact_async(on_swap=lambda: fired.append(1))
+    handle.wait(60)
+    assert fired == [1]
+
+
+def test_writer_mutation_during_compaction_is_typed_error(tmp_path):
+    w = make_writer(tmp_path)
+    gate = threading.Event()
+    orig = w._merged_indexes
+
+    def slow_merge(segments):
+        gate.wait(10)
+        return orig(segments)
+
+    w._merged_indexes = slow_merge
+    handle = w.compact_async()
+    w.add_documents(["held back"])
+    try:
+        assert w.compacting
+        with pytest.raises(RuntimeError, match="background compaction"):
+            w.commit()
+        with pytest.raises(RuntimeError, match="background compaction"):
+            w.compact()
+        with pytest.raises(RuntimeError, match="background compaction"):
+            w.compact_async()
+    finally:
+        gate.set()
+    handle.wait(60)
+    assert not w.compacting
+    w.commit()  # the buffered doc was preserved and commits fine now
+    assert w.n_docs == len(DOCS_V1 + DOCS_V2) + 1
+
+
+def test_failed_compaction_leaves_segments_intact(tmp_path):
+    w = make_writer(tmp_path)
+    before = [s.name for s in w.segments]
+
+    def exploding(segments):
+        raise RuntimeError("merge wedged")
+
+    w._merged_indexes = exploding
+    handle = w.compact_async()
+    with pytest.raises(CompactionError, match="merge wedged"):
+        handle.wait(60)
+    assert handle.failed
+    assert [s.name for s in w.segments] == before
+    seg_root = w.path / "segments"
+    assert sorted(p.name for p in seg_root.iterdir()) == before  # no debris
+    for q in QUERIES:  # still servable
+        Session.open(w.path, device=False).execute(q)
+        break
+
+
+def test_compaction_handle_timeout_is_typed(tmp_path):
+    gate = threading.Event()
+    handle = CompactionHandle(lambda: gate.wait(10)).start()
+    with pytest.raises(TimeoutError, match="still running"):
+        handle.wait(0.05)
+    gate.set()
+    handle.wait(10)
+
+
+# ----------------------------------------------------------------------
+# crash consistency
+# ----------------------------------------------------------------------
+def test_interrupted_commit_leaves_no_half_segment(tmp_path, monkeypatch):
+    import repro.core.writer as writer_mod
+
+    w = make_writer(tmp_path, both=False)
+    calls = {"n": 0}
+    orig = writer_mod.save_index
+
+    def failing_save(idx, path):
+        calls["n"] += 1
+        if calls["n"] > 1:  # let nonpositional through, kill positional
+            raise OSError("injected mid-commit failure")
+        return orig(idx, path)
+
+    monkeypatch.setattr(writer_mod, "save_index", failing_save)
+    w.add_documents(DOCS_V2)
+    with pytest.raises(OSError, match="injected"):
+        w.commit()
+    monkeypatch.setattr(writer_mod, "save_index", orig)
+    # the manifest never adopted the dead segment and no dir survives
+    assert [s.name for s in w.segments] == ["seg-000000"]
+    seg_root = w.path / "segments"
+    assert sorted(p.name for p in seg_root.iterdir()) == ["seg-000000"]
+    resumed = IndexWriter.open(w.path)
+    assert resumed.n_docs == len(DOCS_V1)
+    Session.open(w.path, device=False).execute("alpha")
+
+
+def test_resume_discards_orphaned_build_dirs(tmp_path):
+    """A hard crash (no in-process cleanup) leaves ``.tmp-*`` /
+    ``.compact-*`` dirs behind; resume removes them and never serves
+    them."""
+    w = make_writer(tmp_path, both=False)
+    seg_root = w.path / "segments"
+    (seg_root / ".tmp-seg-000001").mkdir()
+    (seg_root / ".tmp-seg-000001" / "junk.bin").write_bytes(b"xx")
+    (seg_root / ".compact-seg-000001").mkdir()
+    # a renamed-but-never-adopted dir (crash between rename and manifest)
+    (seg_root / "seg-000099").mkdir()
+    resumed = IndexWriter.open(w.path)
+    assert sorted(p.name for p in seg_root.iterdir()) == ["seg-000000"]
+    assert [s.name for s in resumed.segments] == ["seg-000000"]
+    resumed.add_documents(DOCS_V2)
+    resumed.commit()
+    assert resumed.n_docs == len(DOCS_V1 + DOCS_V2)
+
+
+# ----------------------------------------------------------------------
+# refresh() racing execute() across threads
+# ----------------------------------------------------------------------
+def test_refresh_racing_execute_yields_consistent_snapshots(tmp_path):
+    """One thread refreshes through commits and a compaction while another
+    executes continuously: every answer must equal the pre- or the
+    post-refresh snapshot for its query — never a mix, never an error."""
+    w = make_writer(tmp_path, both=False)
+    sess = Session.open(w.path, device=False, mmap=True)
+
+    q = "docs: alpha"
+    snap_before = np.asarray(Session.open(w.path, device=False).execute(q))
+    w_after = IndexWriter.open(w.path)
+    w_after.add_documents(DOCS_V2)
+    # legal answers: against 1 segment, against 2, or post-compaction
+    legal = [snap_before]
+
+    errors: list[BaseException] = []
+    answers: list[np.ndarray] = []
+    stop = threading.Event()
+
+    def executor():
+        try:
+            while not stop.is_set():
+                answers.append(np.asarray(sess.execute(q)))
+        except BaseException as e:  # pragma: no cover - failure surface
+            errors.append(e)
+
+    t = threading.Thread(target=executor)
+    t.start()
+    try:
+        w_after.commit()
+        sess.refresh()
+        legal.append(np.asarray(Session.open(w.path, device=False).execute(q)))
+        time.sleep(0.05)
+        handle = w_after.compact_async(on_swap=sess.refresh)
+        handle.wait(60)
+        legal.append(np.asarray(Session.open(w.path, device=False).execute(q)))
+        time.sleep(0.05)
+    finally:
+        stop.set()
+        t.join(30)
+    assert not errors, errors
+    assert len(answers) > 0
+    for i, ans in enumerate(answers):
+        assert any(np.array_equal(ans, snap) for snap in legal), \
+            (f"(seed={BASE_SEED}) answer {i} is a cross-snapshot mix: "
+             f"{ans} not in {[s.tolist() for s in legal]}")
+    # the executing thread did observe the post-commit state eventually
+    assert any(np.array_equal(answers[-1], snap) for snap in legal[1:])

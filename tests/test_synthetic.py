@@ -1,0 +1,108 @@
+"""Streaming synthetic collections: determinism, bounded chunks,
+repetitiveness, and ingestion into the segmented writer.
+
+The generator's contract (``repro.data.synthetic``): the same spec always
+streams the same documents in the same chunk boundaries; memory is
+bounded by the chunk plus per-article branch tails (the collection is
+never materialized inside the generator); consecutive versions are
+near-copies at the configured edit rate — the repetitiveness the scale
+benchmarks (and the paper's premise) rely on.
+"""
+
+import difflib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.writer import IndexWriter
+from repro.data.synthetic import SyntheticSpec, ingest_stream, stream_collection
+from repro.serving.session import Session
+
+BASE_SEED = int(os.environ.get("REPRO_DIFF_SEED", "20260727"))
+
+SPEC = SyntheticSpec(n_articles=4, versions_per_article=6, words_per_doc=40,
+                     vocab_size=200, chunk_docs=5, seed=BASE_SEED % 9973)
+
+
+def all_docs(spec):
+    return [d for chunk in stream_collection(spec) for d in chunk]
+
+
+def test_stream_is_deterministic_and_complete():
+    docs1 = all_docs(SPEC)
+    docs2 = all_docs(SPEC)
+    assert docs1 == docs2
+    assert len(docs1) == SPEC.n_docs == 24
+
+
+def test_chunks_are_bounded():
+    sizes = [len(c) for c in stream_collection(SPEC)]
+    assert all(s <= SPEC.chunk_docs for s in sizes)
+    assert all(s == SPEC.chunk_docs for s in sizes[:-1])  # only tail partial
+    assert sum(sizes) == SPEC.n_docs
+
+
+def test_seed_and_branching_change_the_collection():
+    other_seed = all_docs(SyntheticSpec(**{**SPEC.config(),
+                                           "seed": SPEC.seed + 1}))
+    branched = all_docs(SyntheticSpec(**{**SPEC.config(), "branching": 3}))
+    base = all_docs(SPEC)
+    assert other_seed != base
+    assert branched != base
+    assert len(other_seed) == len(branched) == len(base)
+
+
+def test_versions_are_near_copies():
+    """Round-robin order: doc (v * n_articles + a) is version v of
+    article a; consecutive versions must be highly similar, different
+    articles must not be."""
+    docs = all_docs(SPEC)
+    n = SPEC.n_articles
+    same = difflib.SequenceMatcher(None, docs[0], docs[n]).ratio()
+    cross = difflib.SequenceMatcher(None, docs[0], docs[1]).ratio()
+    assert same > 0.8, f"(seed={BASE_SEED}) versions not repetitive: {same}"
+    assert same > cross, (same, cross)
+
+
+def test_invalid_spec_is_typed_error():
+    with pytest.raises(ValueError, match="branching"):
+        next(stream_collection(SyntheticSpec(branching=0)))
+    with pytest.raises(ValueError, match="chunk_docs"):
+        next(stream_collection(SyntheticSpec(chunk_docs=0)))
+
+
+def test_ingest_stream_builds_servable_segments(tmp_path):
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=False)
+    n = ingest_stream(w, SPEC, commit_every=2)
+    assert n == SPEC.n_docs
+    assert w.n_docs == SPEC.n_docs
+    assert len(w.segments) == 3  # ceil(24 / 5) = 5 chunks -> 3 commits
+    sess = Session.open(w.path, device=False, mmap=True)
+    # differential: the streamed collection equals the materialized one
+    docs = all_docs(SPEC)
+    word = docs[0].split()[0]
+    expected = np.asarray(sorted(i for i, d in enumerate(docs)
+                                 if word in d.split()), dtype=np.int64)
+    got = np.asarray(sess.execute(f"docs: {word}"))
+    assert np.array_equal(got, expected), \
+        f"(seed={BASE_SEED}, word={word!r}): {got} != {expected}"
+
+
+def test_ingest_stream_max_docs_truncates(tmp_path):
+    w = IndexWriter(tmp_path / "col", store="vbyte", positional=False)
+    n = ingest_stream(w, SPEC, max_docs=7)
+    assert n == 7 and w.n_docs == 7
+    docs = all_docs(SPEC)[:7]
+    sess = Session.open(w.path, device=False)
+    word = docs[0].split()[0]
+    expected = np.asarray(sorted(i for i, d in enumerate(docs)
+                                 if word in d.split()), dtype=np.int64)
+    assert np.array_equal(np.asarray(sess.execute(f"docs: {word}")), expected)
+
+
+def test_approx_bytes_in_right_ballpark():
+    docs = all_docs(SPEC)
+    actual = sum(len(d) for d in docs)
+    approx = SPEC.approx_bytes()
+    assert 0.3 * actual < approx < 3 * actual, (approx, actual)
